@@ -1,0 +1,104 @@
+"""Fig. 3 reproduction: speedup factor vs number of workers.
+
+The paper measures t_1 / t_n where t_n is the wall time for n workers to
+reach the objective value p that 1 worker reaches at the end of training.
+
+HARDWARE ADAPTATION (documented in DESIGN.md / EXPERIMENTS.md): this offline
+container exposes a SINGLE CPU core, so genuine thread-parallel wall-time
+speedup is physically impossible here. The asynchronous *dynamics* (threads,
+best-effort queues, stale local copies) are still real; only the clock is
+virtualized: worker p's i-th gradient completes at virtual time i * tau,
+with tau the measured single-gradient latency — i.e. a perfect-parallel
+compute model on top of real staleness. The virtual speedup then measures
+the *statistical* efficiency of asynchronous DML: near-P means stale
+gradients are (almost) as useful as fresh ones, which is the paper's claim.
+On a >= P core host the real wall-clock numbers (also recorded) apply.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import dml_paper
+from repro.core import dml
+from repro.core.ps import simulator
+from repro.data import pairs as pairdata
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def run(workers=(1, 2, 4), steps_per_worker: int = 150, scale: int = 8,
+        seed: int = 0):
+    exp = dml_paper.scaled_down(dml_paper.MNIST, scale)
+    data_cfg = pairdata.PairDatasetConfig(
+        n_samples=exp.n_samples, feat_dim=exp.dml.feat_dim,
+        n_classes=10, kind="noisy_subspace", seed=seed)
+    train_pairs, _ = pairdata.train_eval_split(
+        data_cfg, exp.n_similar, exp.n_dissimilar, 1000, 1000)
+    L0 = np.asarray(dml.init_params(exp.dml, jax.random.PRNGKey(seed)))
+
+    results = {}
+    target = None
+    for P in workers:
+        cfg = simulator.AsyncPSConfig(
+            n_workers=P, lr=1e-2, batch_size=exp.batch_size,
+            steps_per_worker=steps_per_worker, seed=seed)
+        t0 = time.perf_counter()
+        _, trace = simulator.run_async_dml(cfg, train_pairs, L0)
+        wall = time.perf_counter() - t0
+        # virtual time: worker p's i-th gradient lands at (i+1) * tau, with
+        # tau the single-worker per-gradient latency (constant across P —
+        # each worker owns a core in the modeled deployment)
+        if P == workers[0]:
+            tau = wall / len(trace)
+        else:
+            tau = results[workers[0]]["tau_s"]
+        counts = {}
+        vts, ls = [], []
+        for _, wid, loss in trace:
+            counts[wid] = counts.get(wid, 0) + 1
+            vts.append(counts[wid] * tau)
+            ls.append(loss)
+        vts = np.array(vts)
+        ls = np.array(ls)
+        order = np.argsort(vts, kind="stable")
+        smooth = np.convolve(ls[order], np.ones(15) / 15, mode="same")
+        if P == workers[0]:
+            target = float(ls[-30:].mean())
+            t_reach = float(vts.max())
+        else:
+            hit = np.nonzero(smooth <= target)[0]
+            t_reach = float(vts[order][hit[0]]) if len(hit) else float(vts.max())
+        results[P] = {"wall_s": wall, "tau_s": tau,
+                      "t_reach_target_virtual_s": t_reach}
+        print(f"fig3: P={P} wall={wall:.1f}s tau={tau*1e3:.1f}ms "
+              f"virtual t_reach={t_reach:.2f}s")
+
+    t1 = results[workers[0]]["t_reach_target_virtual_s"]
+    for P in workers:
+        results[P]["speedup"] = t1 / max(
+            results[P]["t_reach_target_virtual_s"], 1e-9)
+        results[P]["ideal"] = float(P)
+        print(f"fig3: P={P} speedup={results[P]['speedup']:.2f} (ideal {P})")
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "fig3_speedup.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    results = run()
+    ps = sorted(results)
+    sp = [results[P]["speedup"] for P in ps]
+    assert sp[-1] > 1.2, f"no parallel speedup measured: {sp}"
+    assert all(b >= a * 0.7 for a, b in zip(sp, sp[1:])), \
+        f"speedup not ~monotone: {sp}"
+
+
+if __name__ == "__main__":
+    main()

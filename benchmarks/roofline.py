@@ -1,0 +1,141 @@
+"""Roofline report: reads the dry-run artifacts and prints, per
+(arch x shape x mesh): the three terms, the dominant bottleneck,
+MODEL_FLOPS / HLO_FLOPs (useful-compute ratio) and a what-would-move-it note.
+
+MODEL_FLOPS conventions (per spec):
+  train:   6 * N * D     (N = params w/o embeddings for dense; N_active for MoE)
+  prefill: 2 * N * D
+  decode:  2 * N * B     (one token per sequence)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ArchConfig
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def _attn_params(cfg: ArchConfig) -> int:
+    d, H, K, dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.dim_per_head
+    return d * H * dh + 2 * d * K * dh + H * dh * d
+
+
+def _mlp_params(cfg: ArchConfig, f=None) -> int:
+    f = f or cfg.d_ff
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return 3 * cfg.d_model * f
+    if cfg.mlp_kind == "gelu":
+        return 2 * cfg.d_model * f
+    if cfg.mlp_kind == "rwkv_channel_mix":
+        return 2 * cfg.d_model * f + cfg.d_model * cfg.d_model
+    return 3 * cfg.d_model * f
+
+
+def param_counts(cfg: ArchConfig):
+    """(total_params, active_params) excluding embeddings (standard 6ND)."""
+    d = cfg.d_model
+    L = cfg.n_layers
+    if cfg.family == "ssm":       # rwkv6
+        tmix = 5 * d * d + 2 * d * max(32, d // 32)
+        per_layer = tmix + _mlp_params(cfg)
+        return L * per_layer, L * per_layer
+    if cfg.family == "hybrid":    # zamba2: mamba2 stack + ONE shared block
+        d_in = cfg.ssm_expand * d
+        n = cfg.ssm_state
+        mamba = (d * d_in + d * (d_in + 2 * n) + d * cfg.ssm_heads
+                 + d_in * d)
+        shared = _attn_params(cfg) + 2 * d * cfg.d_ff
+        total = L * mamba + shared
+        # the shared block RUNS L/every times: active compute counts each use
+        active = L * mamba + (L // cfg.shared_attn_every) * shared
+        return total, active
+    per_layer = _attn_params(cfg)
+    if cfg.n_experts:
+        experts = cfg.n_experts * 3 * d * cfg.d_ff + d * cfg.n_experts
+        active = (_attn_params(cfg) + cfg.top_k * 3 * d * cfg.d_ff
+                  + d * cfg.n_experts)
+        return L * (per_layer + experts), L * active
+    per_layer += _mlp_params(cfg)
+    return L * per_layer, L * per_layer
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    total, active = param_counts(cfg)
+    B, T = shape.global_batch, shape.seq_len
+    if shape.mode == "train":
+        return 6.0 * active * B * T
+    if shape.mode == "prefill":
+        return 2.0 * active * B * T
+    return 2.0 * active * B          # decode: one token per sequence
+
+
+def improvement_note(rec: dict) -> str:
+    t = rec["roofline"]
+    dom = t["dominant"]
+    if dom == "memory":
+        if rec["mode"] in ("decode",):
+            return ("memory: decode reads all weights+cache per token — "
+                    "batch more sequences per step or quantize KV to int8")
+        return ("memory: attention/scan tiles round-trip HBM — fuse the "
+                "streaming softmax into VMEM (Pallas flash kernel) and keep "
+                "tiles bf16")
+    if dom == "collective":
+        return ("collective: gradient/param all-reduce dominates — overlap "
+                "reduce-scatter with backward, sync every tau steps "
+                "(local-SGD, the paper's async insight), or quantize grads")
+    return ("compute: MXU-bound — the causal chunked attention computes "
+            "masked tiles; skip fully-masked tiles and align dims to 128")
+
+
+def load(mesh_name: str) -> dict:
+    path = os.path.join(ART, f"dryrun_{mesh_name}.json")
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def report(mesh_name: str = "16x16", out=sys.stdout):
+    records = load(mesh_name)
+    rows = []
+    print(f"\n== Roofline ({mesh_name} mesh) ==", file=out)
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp_s':>9s} {'mem_s':>9s} "
+           f"{'coll_s':>9s} {'dominant':>10s} {'useful%':>8s}")
+    print(hdr, file=out)
+    for key, rec in sorted(records.items()):
+        if rec.get("status") != "ok" or rec.get("shape") == "paper_batch":
+            continue
+        t = rec["roofline"]
+        mf = model_flops(rec["arch"], rec["shape"])
+        hlo_global = rec["flops_per_chip"] * rec["n_chips"]
+        useful = mf / hlo_global if hlo_global else 0.0
+        rows.append((rec, useful))
+        print(f"{rec['arch']:24s} {rec['shape']:12s} "
+              f"{t['compute_s']:9.4f} {t['memory_s']:9.3f} "
+              f"{t['collective_s']:9.4f} {t['dominant']:>10s} "
+              f"{100*useful:7.1f}%", file=out)
+    # paper DML configs
+    for key, rec in sorted(records.items()):
+        if rec.get("shape") == "paper_batch" and rec.get("status") == "ok":
+            t = rec["roofline"]
+            print(f"{rec['arch']:24s} {'paper':12s} "
+                  f"{t['compute_s']:9.4f} {t['memory_s']:9.3f} "
+                  f"{t['collective_s']:9.4f} {t['dominant']:>10s} "
+                  f"{'':>8s}", file=out)
+    return rows
+
+
+def main():
+    for mesh_name in ("16x16", "pod2x16x16"):
+        report(mesh_name)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark suite runner — one entry per paper table/figure + the roofline
+report. Prints ``name,status,seconds`` CSV summary lines (machine-parseable)
+after each section's own output.
+
+  table1  -> dataset statistics (paper Table 1)
+  fig2    -> async-PS convergence vs worker count (paper Fig. 2)
+  fig3    -> speedup factors (paper Fig. 3)
+  fig4    -> metric quality: ours vs Xing2002/ITML/KISS/Euclidean (Fig. 4)
+  roofline-> per (arch x shape x mesh) roofline terms from the dry-run
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    results = []
+
+    def section(name, fn):
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            results.append((name, "ok", time.time() - t0))
+        except Exception as e:
+            traceback.print_exc()
+            results.append((name, f"FAIL:{type(e).__name__}",
+                            time.time() - t0))
+
+    from benchmarks import (ablation_sync, fig2_convergence, fig3_speedup,
+                            fig4_quality, roofline, table1_datasets)
+
+    section("table1_datasets", table1_datasets.main)
+    section("fig4_quality", fig4_quality.main)
+    section("fig2_convergence", fig2_convergence.main)
+    section("fig3_speedup", fig3_speedup.main)
+    section("ablation_sync", ablation_sync.main)
+    section("roofline", roofline.main)
+
+    print("\nname,status,seconds")
+    failed = False
+    for name, status, secs in results:
+        print(f"{name},{status},{secs:.1f}")
+        failed |= status != "ok"
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

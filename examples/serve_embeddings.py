@@ -1,0 +1,54 @@
+"""Serving example: batched requests -> backbone decode/embedding -> metric
+retrieval with the tiled pairwise-distance Pallas kernel.
+
+A tiny corpus is embedded once; each request batch is embedded and ranked
+against the corpus under the learned Mahalanobis metric.
+
+Run:  PYTHONPATH=src python examples/serve_embeddings.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core import dml
+from repro.kernels.pairwise_dist import metric_sqdist_matrix
+from repro.models import build_model
+
+
+def main():
+    cfg = reduced(get_config("smollm-135m")).replace(dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dml_cfg = dml.DMLConfig(feat_dim=cfg.d_model, proj_dim=64)
+    L = dml.init_params(dml_cfg, jax.random.PRNGKey(7))
+
+    embed = jax.jit(lambda p, toks: model.embed_pool(p, {"tokens": toks}))
+
+    rng = np.random.RandomState(0)
+    corpus_tokens = jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (64, 32)).astype(np.int32))
+    corpus_emb = embed(params, corpus_tokens)
+    print(f"corpus embedded: {corpus_emb.shape}")
+
+    # batched request loop (the serving pattern: fixed-shape batches, jitted)
+    for batch_id in range(3):
+        req_tokens = jnp.asarray(
+            rng.randint(0, cfg.vocab_size, (8, 32)).astype(np.int32))
+        t0 = time.perf_counter()
+        req_emb = embed(params, req_tokens)
+        D = metric_sqdist_matrix(L, req_emb, corpus_emb)   # Pallas kernel
+        top = jnp.argsort(D, axis=1)[:, :5]
+        dt = (time.perf_counter() - t0) * 1e3
+        print(f"batch {batch_id}: {req_emb.shape[0]} requests in {dt:.1f}ms; "
+              f"top-1 ids {np.asarray(top[:, 0])}")
+        assert np.isfinite(np.asarray(D)).all()
+
+    print("serving loop OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Sharding-aware pytree checkpointing (npz payload + msgpack manifest).
+
+Arrays are gathered to host (fully replicated view) before writing; restore
+optionally re-places leaves onto a target sharding tree. No orbax offline —
+this is a small, dependency-free implementation with the same surface.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves, treedef = flat
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3):
+    """Write tree to <ckpt_dir>/step_<step>.npz + .manifest.msgpack."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat, _ = _flatten_with_paths(tree)
+    arrays = {}
+    manifest = {"step": step, "keys": [], "scalars": {}}
+    for k, v in flat.items():
+        if isinstance(v, (int, float, bool, str)) or v is None:
+            manifest["scalars"][k] = v
+            continue
+        arr = np.asarray(jax.device_get(v))
+        arrays[k] = arr
+        manifest["keys"].append(k)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".manifest.msgpack", "wb") as f:
+        f.write(msgpack.packb(manifest))
+    _gc(ckpt_dir, keep)
+    return path + ".npz"
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(latest_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        for suffix in (".npz", ".manifest.msgpack"):
+            p = os.path.join(ckpt_dir, f"step_{s:08d}{suffix}")
+            if os.path.exists(p):
+                os.remove(p)
+
+
+def latest_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for fn in os.listdir(ckpt_dir):
+        m = re.match(r"step_(\d+)\.npz$", fn)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = latest_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, target: Any, step: Optional[int] = None,
+                       shardings: Any = None):
+    """Restore into the structure of ``target``. ``shardings`` (optional)
+    is a matching pytree of NamedShardings for device placement."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(path + ".npz")
+    with open(path + ".manifest.msgpack", "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+
+    flat_target, treedef = _flatten_with_paths(target)
+    restored = {}
+    for k, v in flat_target.items():
+        if k in manifest["scalars"]:
+            restored[k] = manifest["scalars"][k]
+        elif k in data:
+            arr = data[k]
+            if hasattr(v, "dtype"):
+                arr = arr.astype(v.dtype)
+            restored[k] = jnp.asarray(arr)
+        else:
+            raise KeyError(f"checkpoint {path} missing leaf {k}")
+
+    leaves_in_order = [restored[k] for k in flat_target.keys()]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves_in_order)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else x,
+            tree, shardings)
+    return tree, step

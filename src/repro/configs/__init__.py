@@ -1,0 +1,3 @@
+from repro.configs.base import ArchConfig, InputShape, RunConfig, reduced  # noqa: F401
+from repro.configs.registry import get_config, list_configs  # noqa: F401
+from repro.configs.shapes import SHAPES, get_shape  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.core import dml, losses  # noqa: F401

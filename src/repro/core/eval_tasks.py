@@ -1,0 +1,82 @@
+"""Downstream tasks the paper motivates DML with (§1: retrieval, k-means
+clustering, kNN classification) — evaluated under a learned metric.
+
+All distances route through the tiled pairwise kernel
+(kernels/pairwise_dist). Because the Mahalanobis metric factorizes as
+M = LᵀL, every task reduces to Euclidean geometry in the projected space
+x -> L x, so k-means stays exact Lloyd iterations there.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.pairwise_dist import metric_sqdist_matrix
+
+
+def knn_classify(L: Optional[jax.Array], train_x, train_y, test_x,
+                 k: int = 5):
+    """k-nearest-neighbour labels under the metric (L=None -> Euclidean)."""
+    train_x = jnp.asarray(train_x)
+    test_x = jnp.asarray(test_x)
+    if L is None:
+        L = jnp.eye(train_x.shape[1], dtype=jnp.float32)
+    D = metric_sqdist_matrix(L, test_x, train_x)        # (n_test, n_train)
+    nn = jnp.argsort(D, axis=1)[:, :k]                  # (n_test, k)
+    votes = jnp.asarray(train_y)[nn]                    # (n_test, k)
+    n_classes = int(jnp.max(jnp.asarray(train_y))) + 1
+    counts = jax.vmap(lambda v: jnp.bincount(v, length=n_classes))(votes)
+    return jnp.argmax(counts, axis=1)
+
+
+def knn_accuracy(L, train_x, train_y, test_x, test_y, k: int = 5) -> float:
+    pred = knn_classify(L, train_x, train_y, test_x, k)
+    return float(jnp.mean(pred == jnp.asarray(test_y)))
+
+
+def metric_kmeans(L: Optional[jax.Array], x, n_clusters: int,
+                  n_iter: int = 25, seed: int = 0):
+    """Lloyd k-means in the learned metric space. Returns (assignments,
+    centers_in_projected_space)."""
+    x = jnp.asarray(x, jnp.float32)
+    if L is not None:
+        xp = x @ jnp.asarray(L, jnp.float32).T
+    else:
+        xp = x
+    n = xp.shape[0]
+    rng = np.random.RandomState(seed)
+    centers = xp[jnp.asarray(rng.choice(n, n_clusters, replace=False))]
+
+    @jax.jit
+    def step(centers):
+        d = (jnp.sum(xp**2, 1)[:, None] + jnp.sum(centers**2, 1)[None]
+             - 2 * xp @ centers.T)
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, n_clusters, dtype=jnp.float32)
+        counts = jnp.maximum(onehot.sum(0), 1.0)
+        new_centers = (onehot.T @ xp) / counts[:, None]
+        # keep empty clusters where they were
+        new_centers = jnp.where((onehot.sum(0) > 0)[:, None],
+                                new_centers, centers)
+        return new_centers, assign
+
+    assign = None
+    for _ in range(n_iter):
+        centers, assign = step(centers)
+    return assign, centers
+
+
+def clustering_purity(assignments, labels) -> float:
+    """Fraction of points whose cluster's majority label matches theirs."""
+    assignments = np.asarray(assignments)
+    labels = np.asarray(labels)
+    total = 0
+    for c in np.unique(assignments):
+        member_labels = labels[assignments == c]
+        if len(member_labels):
+            total += np.bincount(member_labels).max()
+    return total / len(labels)

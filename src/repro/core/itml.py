@@ -1,0 +1,69 @@
+"""Baseline: Information-Theoretic Metric Learning (Davis et al., 2007).
+
+ITML minimizes the LogDet divergence to a prior metric M0 subject to
+distance constraints, solved with Bregman projections — one (cheap, rank-one)
+projection per constraint visit:
+
+  similar (x,y):      d_M(x,y) <= u
+  dissimilar (x,y):   d_M(x,y) >= l
+
+Update (for a visited constraint with z = x - y):
+  p     = z^T M z
+  alpha = min(lambda_i, gamma/(gamma+1) * (1/p - 1/target))
+  beta  = delta * alpha / (1 - delta * alpha * p)       (delta = +1 sim, -1 dis)
+  M    <- M + beta * (M z)(M z)^T
+
+This is the paper's Fig. 4 comparison; per-pair cost is O(d^2), vs O(dk)
+for the reformulated method — exactly the gap the paper highlights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ITMLConfig:
+    feat_dim: int
+    gamma: float = 1e-3       # slack tradeoff (paper §5.4 uses 0.001)
+    u: float = 1.0            # upper bound for similar-pair distances
+    l: float = 4.0            # lower bound for dissimilar-pair distances
+    sweeps: int = 3           # passes over the constraint set
+
+
+def fit(cfg: ITMLConfig, xs, ys, sim):
+    """Run ITML Bregman projections. Host loop with a jitted scan per sweep."""
+    n, d = xs.shape
+    z_all = (xs - ys).astype(jnp.float32)                  # (n, d)
+    delta_all = jnp.where(sim > 0, 1.0, -1.0)              # (n,)
+    target_all = jnp.where(sim > 0, cfg.u, cfg.l)          # (n,)
+    gamma = cfg.gamma
+
+    def step(carry, inp):
+        M, lambdas = carry
+        z, delta, target, idx = inp
+        Mz = M @ z                                         # (d,)
+        p = jnp.maximum(z @ Mz, 1e-12)
+        alpha = jnp.minimum(lambdas[idx],
+                            delta * (gamma / (gamma + 1.0)) * (1.0 / p - 1.0 / target))
+        beta = delta * alpha / (1.0 - delta * alpha * p)
+        M = M + beta * jnp.outer(Mz, Mz)
+        lambdas = lambdas.at[idx].add(-alpha)
+        return (M, lambdas), p
+
+    @jax.jit
+    def sweep(M, lambdas):
+        idxs = jnp.arange(n)
+        (M, lambdas), _ = jax.lax.scan(
+            step, (M, lambdas),
+            (z_all, delta_all, target_all, idxs))
+        return M, lambdas
+
+    M = jnp.eye(d, dtype=jnp.float32)
+    lambdas = jnp.zeros((n,), jnp.float32)
+    for _ in range(cfg.sweeps):
+        M, lambdas = sweep(M, lambdas)
+    return M

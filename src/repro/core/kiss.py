@@ -1,0 +1,63 @@
+"""Baseline: KISS metric learning (Koestinger et al., CVPR 2012).
+
+"Keep It Simple and Straightforward": a one-shot, likelihood-ratio-test
+metric with no iterative optimization —
+
+  M = Sigma_S^{-1} - Sigma_D^{-1}
+
+where Sigma_S / Sigma_D are covariance matrices of pairwise differences over
+similar / dissimilar pairs. The result is projected onto the PSD cone to make
+it a valid metric (as in the original paper's practical recipe). Optionally a
+PCA pre-projection keeps the covariances invertible (the paper reduces MNIST
+to 600 dims before KISS).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dml
+
+
+@dataclasses.dataclass(frozen=True)
+class KISSConfig:
+    feat_dim: int
+    pca_dim: Optional[int] = None   # reduce before covariance estimation
+    ridge: float = 1e-6             # diagonal loading for invertibility
+
+
+def pca_basis(x: jax.Array, dim: int) -> jax.Array:
+    """Top-`dim` principal axes of x (n, d) -> (d, dim)."""
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    # economical SVD: eigh on the d x d covariance
+    cov = xc.T @ xc / x.shape[0]
+    w, V = jnp.linalg.eigh(cov)
+    return V[:, -dim:]              # ascending eigenvalues -> take last `dim`
+
+
+@jax.jit
+def _kiss_metric(zs_sim: jax.Array, zs_dis: jax.Array, ridge: float) -> jax.Array:
+    d = zs_sim.shape[1]
+    eye = jnp.eye(d, dtype=jnp.float32)
+    cov_s = zs_sim.T @ zs_sim / zs_sim.shape[0] + ridge * eye
+    cov_d = zs_dis.T @ zs_dis / zs_dis.shape[0] + ridge * eye
+    M = jnp.linalg.inv(cov_s) - jnp.linalg.inv(cov_d)
+    return dml.psd_project(M)
+
+
+def fit(cfg: KISSConfig, xs, ys, sim):
+    """Returns (M, projection) — apply `x @ projection` before using M if not None."""
+    proj = None
+    if cfg.pca_dim is not None and cfg.pca_dim < cfg.feat_dim:
+        allx = jnp.concatenate([xs, ys], axis=0)
+        proj = pca_basis(allx, cfg.pca_dim)
+        xs, ys = xs @ proj, ys @ proj
+    z = xs - ys
+    zs_sim = z[sim > 0]
+    zs_dis = z[sim <= 0]
+    M = _kiss_metric(zs_sim, zs_dis, cfg.ridge)
+    return M, proj

@@ -1,0 +1,75 @@
+"""Loss registry — DML objectives and LM loss as first-class, composable losses.
+
+Every loss has signature ``loss_fn(params, batch) -> (scalar, aux_dict)`` so
+the PS trainer, the backbone trainer and the benchmarks can swap them freely.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dml
+
+LossFn = Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+_REGISTRY: Dict[str, LossFn] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get(name: str) -> LossFn:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown loss '{name}'; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+@register("dml_pair")
+def dml_pair_loss(L, batch, *, lam: float = 1.0, margin: float = 1.0,
+                  compute_dtype=None):
+    """Paper Eq. 4 over a pair minibatch {xs, ys, sim}."""
+    loss = dml.objective(L, batch["xs"], batch["ys"], batch["sim"],
+                         lam=lam, margin=margin, compute_dtype=compute_dtype)
+    d2 = dml.mahalanobis_sqdist(L, batch["xs"], batch["ys"])
+    sim = batch["sim"].astype(jnp.float32)
+    aux = {
+        "loss": loss,
+        "mean_sim_dist": jnp.sum(d2 * sim) / jnp.maximum(jnp.sum(sim), 1.0),
+        "mean_dis_dist": jnp.sum(d2 * (1 - sim)) / jnp.maximum(jnp.sum(1 - sim), 1.0),
+        "hinge_active_frac": jnp.mean((d2 < margin) * (1 - sim)),
+    }
+    return loss, aux
+
+
+@register("dml_triplet")
+def dml_triplet_loss(L, batch, *, margin: float = 1.0, compute_dtype=None):
+    """Triple-wise constraint extension (paper §4)."""
+    loss = dml.triplet_objective(L, batch["anchor"], batch["pos"], batch["neg"],
+                                 margin=margin, compute_dtype=compute_dtype)
+    return loss, {"loss": loss}
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask=None) -> jax.Array:
+    """Token-level mean CE. logits (..., V), labels (...) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+@register("lm")
+def lm_loss(logits, batch):
+    """Next-token LM loss given precomputed logits and {labels, mask?}."""
+    loss = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return loss, {"loss": loss}

@@ -1,0 +1,1 @@
+from repro.data import pairs, tokens, loader  # noqa: F401

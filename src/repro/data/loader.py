@@ -1,0 +1,58 @@
+"""Sharded batch pipeline: host-side iterator -> device arrays laid out for a
+mesh. Handles per-worker partitioning of the pair sets (paper §4.1: "we
+partition the similar pairs and dissimilar pairs onto different machines").
+"""
+
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def partition_pairs(pairs: dict, n_workers: int):
+    """Split a pair dict into n_workers shards (S_p, D_p as in the paper)."""
+    n = pairs["sim"].shape[0]
+    idx = np.arange(n)
+    shards = np.array_split(idx, n_workers)
+    return [{k: v[s] for k, v in pairs.items()} for s in shards]
+
+
+def shard_batch(batch: dict, sharding) -> dict:
+    """Place a host batch onto devices with the given NamedSharding."""
+    return jax.tree.map(lambda x: jax.device_put(x, sharding), batch)
+
+
+class Prefetcher:
+    """Background-thread prefetch of an iterator (depth-bounded queue)."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._it = it
+        self._done = object()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        try:
+            for item in self._it:
+                self._q.put(item)
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item
+
+
+def take(it: Iterator, n: int):
+    return itertools.islice(it, n)

@@ -1,0 +1,239 @@
+"""Synthetic pair-constraint datasets mirroring the paper's setup (§5.1).
+
+The paper samples similar pairs (same class) and dissimilar pairs (different
+class) from labeled image features (MNIST pixels / ImageNet LLC). Offline we
+generate class-structured feature clouds of matching dimensionality:
+
+  * ``class_blobs``     — Gaussian blobs around random class centers (fast,
+                          used by unit/integration tests).
+  * ``mnist_like``      — 780-dim, 10-class cloud with pixel-like sparsity and
+                          [0,1] range so the MNIST-scale experiments are
+                          shape/scale faithful.
+  * ``llc_like``        — high-dim sparse nonnegative features mimicking LLC
+                          codes (ImageNet-63K / ImageNet-1M configs).
+
+Pair sampling matches the paper: uniform over same-class pairs for S, over
+different-class pairs for D.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PairDatasetConfig:
+    n_samples: int
+    feat_dim: int
+    n_classes: int
+    kind: str = "class_blobs"       # class_blobs | mnist_like | llc_like
+    noise: float = 0.3
+    sparsity: float = 0.9           # fraction of zero dims (llc_like)
+    seed: int = 0
+
+
+def make_features(cfg: PairDatasetConfig) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (features (n, d) float32, labels (n,) int32)."""
+    rng = np.random.RandomState(cfg.seed)
+    labels = rng.randint(0, cfg.n_classes, size=cfg.n_samples).astype(np.int32)
+    centers = rng.randn(cfg.n_classes, cfg.feat_dim).astype(np.float32)
+    if cfg.kind == "class_blobs":
+        x = centers[labels] + cfg.noise * rng.randn(
+            cfg.n_samples, cfg.feat_dim).astype(np.float32)
+    elif cfg.kind == "mnist_like":
+        # pixel-ish: nonnegative, bounded, with class-dependent active masks
+        masks = (rng.rand(cfg.n_classes, cfg.feat_dim) < 0.25)
+        base = np.abs(centers)
+        x = (base[labels] * masks[labels]).astype(np.float32)
+        x += 0.1 * np.abs(rng.randn(cfg.n_samples, cfg.feat_dim)).astype(np.float32)
+        x = np.clip(x / (x.max() + 1e-6), 0.0, 1.0)
+    elif cfg.kind == "noisy_subspace":
+        # class signal lives in a small subspace; the remaining dims carry
+        # high-variance noise that dominates Euclidean distance — the
+        # canonical case where a learned Mahalanobis metric matters
+        s = max(4, cfg.feat_dim // 8)
+        sig_centers = rng.randn(cfg.n_classes, s).astype(np.float32)
+        x = np.empty((cfg.n_samples, cfg.feat_dim), np.float32)
+        x[:, :s] = sig_centers[labels] + cfg.noise * rng.randn(
+            cfg.n_samples, s).astype(np.float32)
+        x[:, s:] = 3.0 * rng.randn(
+            cfg.n_samples, cfg.feat_dim - s).astype(np.float32)
+    elif cfg.kind == "llc_like":
+        # sparse nonnegative codes: class-specific support + magnitude noise
+        masks = (rng.rand(cfg.n_classes, cfg.feat_dim) < (1.0 - cfg.sparsity))
+        mags = np.abs(centers)
+        x = (mags[labels] * masks[labels]).astype(np.float32)
+        x += cfg.noise * np.abs(
+            rng.randn(cfg.n_samples, cfg.feat_dim)).astype(np.float32) * masks[labels]
+    else:
+        raise ValueError(f"unknown kind {cfg.kind}")
+    return x, labels
+
+
+def sample_pairs(features: np.ndarray, labels: np.ndarray, n_similar: int,
+                 n_dissimilar: int, seed: int = 0):
+    """Sample S and D as in the paper: same class -> similar, else dissimilar.
+
+    Returns dict(xs, ys, sim) with xs/ys (n_s+n_d, d), sim in {1, 0}.
+    """
+    rng = np.random.RandomState(seed)
+    n = features.shape[0]
+
+    def draw(n_pairs, want_same):
+        a = np.empty(n_pairs, np.int64)
+        b = np.empty(n_pairs, np.int64)
+        filled = 0
+        while filled < n_pairs:
+            cand_a = rng.randint(0, n, size=2 * (n_pairs - filled))
+            cand_b = rng.randint(0, n, size=2 * (n_pairs - filled))
+            same = labels[cand_a] == labels[cand_b]
+            keep = same if want_same else ~same
+            keep &= cand_a != cand_b
+            k = min(keep.sum(), n_pairs - filled)
+            a[filled:filled + k] = cand_a[keep][:k]
+            b[filled:filled + k] = cand_b[keep][:k]
+            filled += k
+        return a, b
+
+    sa, sb = draw(n_similar, True)
+    da, db = draw(n_dissimilar, False)
+    xs = np.concatenate([features[sa], features[da]], axis=0)
+    ys = np.concatenate([features[sb], features[db]], axis=0)
+    sim = np.concatenate([np.ones(n_similar, np.int32),
+                          np.zeros(n_dissimilar, np.int32)])
+    perm = rng.permutation(xs.shape[0])
+    return {"xs": xs[perm], "ys": ys[perm], "sim": sim[perm]}
+
+
+def sample_pair_indices(labels: np.ndarray, n_similar: int,
+                        n_dissimilar: int, seed: int = 0):
+    """Index-only pair sampling: returns dict(a, b, sim) of int arrays.
+
+    O(n_pairs) memory instead of O(n_pairs * d) — at web scale (the paper's
+    200M pairs) pairs are always stored as indices into the feature store.
+    """
+    rng = np.random.RandomState(seed)
+    n = labels.shape[0]
+
+    def draw(n_pairs, want_same):
+        a = np.empty(n_pairs, np.int64)
+        b = np.empty(n_pairs, np.int64)
+        filled = 0
+        while filled < n_pairs:
+            ca = rng.randint(0, n, size=2 * (n_pairs - filled))
+            cb = rng.randint(0, n, size=2 * (n_pairs - filled))
+            same = labels[ca] == labels[cb]
+            keep = (same if want_same else ~same) & (ca != cb)
+            k = min(keep.sum(), n_pairs - filled)
+            a[filled:filled + k] = ca[keep][:k]
+            b[filled:filled + k] = cb[keep][:k]
+            filled += k
+        return a, b
+
+    sa, sb = draw(n_similar, True)
+    da, db = draw(n_dissimilar, False)
+    a = np.concatenate([sa, da])
+    b = np.concatenate([sb, db])
+    sim = np.concatenate([np.ones(n_similar, np.int32),
+                          np.zeros(n_dissimilar, np.int32)])
+    perm = rng.permutation(a.shape[0])
+    return {"a": a[perm], "b": b[perm], "sim": sim[perm]}
+
+
+def pair_batches_from_indices(features: np.ndarray, idx_pairs: dict,
+                              batch_size: int, seed: int = 0,
+                              balanced: bool = True) -> Iterator[dict]:
+    """Minibatch stream gathering features on the fly (memory-bounded)."""
+    rng = np.random.RandomState(seed)
+    sim_idx = np.nonzero(idx_pairs["sim"] == 1)[0]
+    dis_idx = np.nonzero(idx_pairs["sim"] == 0)[0]
+    n = idx_pairs["sim"].shape[0]
+    while True:
+        if balanced and len(sim_idx) and len(dis_idx):
+            h = batch_size // 2
+            sel = np.concatenate([
+                sim_idx[rng.randint(0, len(sim_idx), h)],
+                dis_idx[rng.randint(0, len(dis_idx), batch_size - h)]])
+        else:
+            sel = rng.randint(0, n, batch_size)
+        yield {
+            "xs": jnp.asarray(features[idx_pairs["a"][sel]]),
+            "ys": jnp.asarray(features[idx_pairs["b"][sel]]),
+            "sim": jnp.asarray(idx_pairs["sim"][sel]),
+        }
+
+
+def pair_batches(pairs: dict, batch_size: int, seed: int = 0,
+                 balanced: bool = True) -> Iterator[dict]:
+    """Infinite minibatch stream. ``balanced`` draws half S / half D per batch
+    as in the paper's experimental setup (§5.2)."""
+    rng = np.random.RandomState(seed)
+    sim_idx = np.nonzero(pairs["sim"] == 1)[0]
+    dis_idx = np.nonzero(pairs["sim"] == 0)[0]
+    n = pairs["sim"].shape[0]
+    while True:
+        if balanced and len(sim_idx) and len(dis_idx):
+            h = batch_size // 2
+            idx = np.concatenate([
+                sim_idx[rng.randint(0, len(sim_idx), h)],
+                dis_idx[rng.randint(0, len(dis_idx), batch_size - h)]])
+        else:
+            idx = rng.randint(0, n, batch_size)
+        yield {k: jnp.asarray(v[idx]) for k, v in pairs.items()}
+
+
+def train_eval_split(cfg: PairDatasetConfig, n_train_sim: int, n_train_dis: int,
+                     n_eval_sim: int, n_eval_dis: int):
+    """Features + disjoint train/eval pair sets (paper's held-out pair eval)."""
+    x, y = make_features(cfg)
+    n_hold = max(cfg.n_samples // 5, 2 * cfg.n_classes)
+    train_x, train_y = x[:-n_hold], y[:-n_hold]
+    hold_x, hold_y = x[-n_hold:], y[-n_hold:]
+    train_pairs = sample_pairs(train_x, train_y, n_train_sim, n_train_dis,
+                               seed=cfg.seed + 1)
+    eval_pairs = sample_pairs(hold_x, hold_y, n_eval_sim, n_eval_dis,
+                              seed=cfg.seed + 2)
+    return train_pairs, eval_pairs
+
+
+def sample_triplet_indices(labels: np.ndarray, n_triplets: int,
+                           seed: int = 0):
+    """(anchor, positive, negative) index triples — the paper's §4
+    triple-wise constraint extension ("i is more similar to j than to k")."""
+    rng = np.random.RandomState(seed)
+    n = labels.shape[0]
+    a = np.empty(n_triplets, np.int64)
+    p = np.empty(n_triplets, np.int64)
+    ng = np.empty(n_triplets, np.int64)
+    filled = 0
+    while filled < n_triplets:
+        ca = rng.randint(0, n, size=2 * (n_triplets - filled))
+        cp = rng.randint(0, n, size=2 * (n_triplets - filled))
+        cn = rng.randint(0, n, size=2 * (n_triplets - filled))
+        keep = ((labels[ca] == labels[cp]) & (labels[ca] != labels[cn])
+                & (ca != cp))
+        k = min(keep.sum(), n_triplets - filled)
+        a[filled:filled + k] = ca[keep][:k]
+        p[filled:filled + k] = cp[keep][:k]
+        ng[filled:filled + k] = cn[keep][:k]
+        filled += k
+    return {"a": a, "p": p, "n": ng}
+
+
+def triplet_batches_from_indices(features: np.ndarray, idx: dict,
+                                 batch_size: int, seed: int = 0):
+    """Minibatch stream of {anchor, pos, neg} gathered on the fly."""
+    rng = np.random.RandomState(seed)
+    n = idx["a"].shape[0]
+    while True:
+        sel = rng.randint(0, n, batch_size)
+        yield {
+            "anchor": jnp.asarray(features[idx["a"][sel]]),
+            "pos": jnp.asarray(features[idx["p"][sel]]),
+            "neg": jnp.asarray(features[idx["n"][sel]]),
+        }

@@ -1,0 +1,1 @@
+from repro.kernels import dml_pair, flash_attention, pairwise_dist  # noqa: F401

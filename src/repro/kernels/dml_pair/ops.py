@@ -1,0 +1,89 @@
+"""Jitted public wrapper for the fused DML pair kernel, with custom VJP.
+
+Forward: the Pallas kernel (fused z / matmul / sumsq / hinge).
+Backward: closed-form gradients — two dense matmuls on the saved projection
+(XLA-optimal; no kernel needed):
+
+    w_b    = sim_b - lam * (1 - sim_b) * 1{d2_b < margin}   (hinge weight)
+    dL     = 2/B * (proj * w)^T @ z * g
+    dz     = 2/B * w * (proj @ L) * g ;  dxs = dz, dys = -dz
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dml_pair.kernel import dml_pair_fused
+from repro.kernels.dml_pair.ref import dml_pair_ref
+
+
+def _pad_to(x, mult, axis):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def dml_pair_loss_fused(L, xs, ys, sim, lam: float = 1.0, margin: float = 1.0,
+                        interpret: bool = True):
+    """Mean Eq. 4 objective via the Pallas kernel. Differentiable w.r.t.
+    L, xs, ys (the latter two enable end-to-end deep metric learning)."""
+    losses = _forward(L, xs, ys, sim, lam, margin, interpret)[0]
+    return jnp.mean(losses)
+
+
+def _forward(L, xs, ys, sim, lam, margin, interpret):
+    k, d = L.shape
+    B = xs.shape[0]
+    # pad to tile boundaries (sim=1, x=y=0 padding contributes zero loss)
+    bB = 256 if B >= 256 else max(8, B)
+    bK = 128 if k >= 128 else k
+    bD = 512 if d >= 512 else d
+    Lp, _ = _pad_to(L, bK, 0)
+    Lp, _ = _pad_to(Lp, bD, 1)
+    xsp, _ = _pad_to(xs, bD, 1)
+    ysp, _ = _pad_to(ys, bD, 1)
+    xsp, _ = _pad_to(xsp, bB, 0)
+    ysp, _ = _pad_to(ysp, bB, 0)
+    simp = jnp.pad(sim, (0, (-B) % bB), constant_values=1)
+    losses, d2, proj = dml_pair_fused(
+        Lp, xsp, ysp, simp, lam=lam, margin=margin,
+        block_b=bB, block_k=bK, block_d=bD, interpret=interpret)
+    return losses[:B], d2[:B], proj[:B, :k]
+
+
+def _fwd(L, xs, ys, sim, lam, margin, interpret):
+    losses, d2, proj = _forward(L, xs, ys, sim, lam, margin, interpret)
+    return jnp.mean(losses), (L, xs, ys, sim, d2, proj)
+
+
+def _bwd(lam, margin, interpret, res, g):
+    L, xs, ys, sim, d2, proj = res
+    B = xs.shape[0]
+    simf = sim.astype(jnp.float32)
+    active = (d2 < margin).astype(jnp.float32)
+    w = simf - lam * (1.0 - simf) * active              # (B,)
+    z = (xs - ys).astype(jnp.float32)
+    scale = 2.0 * g / B
+    pw = proj * w[:, None]                              # (B,k)
+    dL = scale * pw.T @ z                               # (k,d)
+    dz = scale * (pw @ L.astype(jnp.float32))           # (B,d)
+    return (dL.astype(L.dtype), dz.astype(xs.dtype), (-dz).astype(ys.dtype),
+            None)
+
+
+dml_pair_loss_fused.defvjp(_fwd, _bwd)
+
+
+def dml_pair_loss_reference(L, xs, ys, sim, lam: float = 1.0,
+                            margin: float = 1.0):
+    """Oracle mean objective (pure jnp) for tests and CPU execution."""
+    losses, _, _ = dml_pair_ref(L, xs, ys, sim, lam, margin)
+    return jnp.mean(losses)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal/sliding)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float = None):
+    """q (B,T,H,Dh); k,v (B,S,K,Dh) with H % K == 0. Returns (B,T,H,Dh).
+
+    window > 0 limits attention to the last `window` positions (sliding).
+    """
+    B, T, H, dh = q.shape
+    S, K = k.shape[1], k.shape[2]
+    scale = scale or 1.0 / np.sqrt(dh)
+    qg = q.reshape(B, T, K, H // K, dh)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(T)
+    kpos = jnp.arange(S)
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgts,bskd->btkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, T, H, dh).astype(q.dtype)

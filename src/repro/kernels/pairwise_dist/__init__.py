@@ -1,0 +1,3 @@
+from repro.kernels.pairwise_dist.ops import metric_sqdist_matrix  # noqa: F401
+from repro.kernels.pairwise_dist.kernel import pairwise_sqdist  # noqa: F401
+from repro.kernels.pairwise_dist.ref import pairwise_sqdist_ref  # noqa: F401

@@ -1,0 +1,35 @@
+"""Public wrapper for the pairwise-distance kernel with padding + fallback."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.pairwise_dist.kernel import pairwise_sqdist
+from repro.kernels.pairwise_dist.ref import pairwise_sqdist_ref
+
+
+def metric_sqdist_matrix(L, x, y, *, interpret: bool = True,
+                         use_kernel: bool = True):
+    """All-pairs Mahalanobis distances: D[i,j] = ||L(x_i - y_j)||^2.
+
+    Projects through L first (O((N+M) k d)), then runs the tiled kernel on
+    the much smaller k-dimensional cross term.
+    """
+    xp = x.astype(jnp.float32) @ L.astype(jnp.float32).T
+    yp = y.astype(jnp.float32) @ L.astype(jnp.float32).T
+    N, k = xp.shape
+    M = yp.shape[0]
+    if not use_kernel or N % 8 or M % 8:
+        return pairwise_sqdist_ref(xp, yp)
+    bN = 256 if N % 256 == 0 else _largest_tile(N)
+    bM = 256 if M % 256 == 0 else _largest_tile(M)
+    bC = 512 if k % 512 == 0 else _largest_tile(k)
+    return pairwise_sqdist(xp, yp, block_n=bN, block_m=bM, block_c=bC,
+                           interpret=interpret)
+
+
+def _largest_tile(n, cap=512):
+    for t in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if t <= cap and n % t == 0:
+            return t
+    return 1

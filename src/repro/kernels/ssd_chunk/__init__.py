@@ -1,0 +1,3 @@
+from repro.kernels.ssd_chunk.ops import ssd_core  # noqa: F401
+from repro.kernels.ssd_chunk.kernel import ssd_scan  # noqa: F401
+from repro.kernels.ssd_chunk.ref import ssd_scan_ref  # noqa: F401

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the SSD chunk kernel: exact sequential recurrence,
+single (batch*head) pane layout matching the kernel's contract."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(xs, Bm, Cm, dt, la):
+    """Exact recurrence, pane layout.
+
+    xs (G, T, p)   per-head inputs        (G = B * H panes)
+    Bm (G, T, n)   input projections
+    Cm (G, T, n)   output projections
+    dt (G, T)      softplus'd step sizes
+    la (G, T)      log decays (dt * A, negative)
+
+    h_t = exp(la_t) h_{t-1} + dt_t * x_t B_t^T ;  y_t = h_t C_t
+    Returns (y (G, T, p), h_final (G, p, n)).
+    """
+    G, T, p = xs.shape
+    n = Bm.shape[-1]
+
+    def pane(x_g, B_g, C_g, dt_g, la_g):
+        def step(h, t_in):
+            x_t, B_t, C_t, dt_t, la_t = t_in
+            h = jnp.exp(la_t) * h + dt_t * jnp.outer(x_t, B_t)
+            return h, h @ C_t
+        h0 = jnp.zeros((p, n), jnp.float32)
+        hf, ys = jax.lax.scan(
+            step, h0,
+            (x_g.astype(jnp.float32), B_g.astype(jnp.float32),
+             C_g.astype(jnp.float32), dt_g.astype(jnp.float32),
+             la_g.astype(jnp.float32)))
+        return ys, hf
+
+    ys, hf = jax.vmap(pane)(xs, Bm, Cm, dt, la)
+    return ys.astype(xs.dtype), hf

@@ -1,0 +1,301 @@
+"""Post-compile HLO analysis: collective bytes, dot FLOPs, roofline terms.
+
+Why parse HLO text instead of trusting ``compiled.cost_analysis()``:
+  1. cost_analysis has no collective-traffic entry at all;
+  2. cost_analysis counts a ``while`` body ONCE — with scan-over-layers that
+     undercounts FLOPs/bytes by a factor of n_layers.
+
+So we walk the optimized HLO call graph ourselves: per computation we
+accumulate (a) collective output bytes, (b) matmul FLOPs from ``dot`` ops
+(2 x output-numel x contraction-size, operand shapes are in the text),
+(c) operand+output bytes of top-level ops (fusion bodies excluded — their
+internals don't touch HBM). ``while`` bodies are multiplied by the loop trip
+count, recovered from the largest integer constant in the loop's condition
+computation (exact for lax.scan loops).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_CALL_RE = re.compile(r"(?:condition|body|to_apply|calls)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+def _line_output_bytes(line: str) -> int:
+    """Sum buffer sizes on the LHS of `lhs = <shapes> op-name(...)`."""
+    eq = line.find(" = ")
+    if eq < 0:
+        return 0
+    rhs = line[eq + 3:]
+    # shapes before the op name; op name terminates the shape prefix
+    m = re.match(r"\(?((?:\w+\[[\d,]*\](?:\{[\d,]*\})?,?\s*)+)\)?\s*[\w\-]+\(",
+                 rhs)
+    if not m:
+        return 0
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(m.group(1)):
+        total += _shape_bytes(dt, dims)
+    return total
+
+
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OPNAME_RE = re.compile(r"^\(?[\w\[\],\{\}\s]*?\)?\s*([\w\-]+)\(")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_TRIP_COUNT_RE = re.compile(r'"known_trip_count":\s*\{\s*"n":\s*"?(\d+)"?')
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    collective_bytes: Dict[str, int]
+    collective_counts: Dict[str, int]
+    while_calls: List[Tuple[str, str]]        # (cond_name, body_name)
+    other_calls: List[str]
+    max_constant: int = 0
+    dot_flops: float = 0.0
+    op_bytes: float = 0.0
+    is_fusion_body: bool = False
+
+
+def _shape_prefix_bytes(rhs: str) -> int:
+    """Buffer bytes of the shape prefix of an op definition RHS (possibly a
+    tuple), i.e. everything before the op name."""
+    m = _OPNAME_RE.match(rhs)
+    prefix = rhs[:m.start(1)] if m else rhs
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(prefix):
+        total += _shape_bytes(dt, dims)
+    return total
+
+
+def _shape_prefix_dims(rhs: str) -> List[List[int]]:
+    m = _OPNAME_RE.match(rhs)
+    prefix = rhs[:m.start(1)] if m else rhs
+    out = []
+    for dt, dims in _SHAPE_RE.findall(prefix):
+        out.append([int(d) for d in dims.split(",")] if dims else [])
+    return out
+
+
+# ops that are pure aliasing / control structure: no HBM traffic of their own
+_NO_TRAFFIC_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast",
+                   "constant", "while", "conditional", "call", "custom-call",
+                   "after-all", "partition-id", "replica-id"}
+# ops whose traffic is proportional to the (small) output, not the operand
+_OUTPUT_TRAFFIC_OPS = {"dynamic-slice", "slice", "gather", "iota",
+                       "broadcast", "reshape", "transpose", "copy"}
+
+
+def _op_traffic_bytes(opname: str, out_name: str, rhs: str, opm,
+                      sym_bytes: Dict[str, int]) -> int:
+    """Approximate HBM traffic of one top-level op.
+
+    dynamic-slice reads only the slice (not the whole stacked operand —
+    critical inside scan-over-layers); dynamic-update-slice writes only the
+    update; aliasing ops are free; everything else reads operands and writes
+    its output.
+    """
+    out_b = sym_bytes.get(out_name, 0)
+    if opname in _NO_TRAFFIC_OPS:
+        return 0
+    if opname in _OUTPUT_TRAFFIC_OPS:
+        return 2 * out_b
+    args = rhs[opm.end(1):] if opm else ""
+    args = args.split("), ")[0]
+    operands = _OPERAND_RE.findall(args)
+    if opname in ("dynamic-update-slice", "scatter"):
+        upd = sym_bytes.get(operands[1], 0) if len(operands) > 1 else out_b
+        return 2 * upd
+    if opname == "fusion":
+        # inputs + output of the fused region (its internals are on-chip)
+        return out_b + sum(sym_bytes.get(o, 0) for o in operands
+                           if "fused" not in o)
+    return out_b + sum(sym_bytes.get(o, 0) for o in operands)
+
+
+def _parse_computations(hlo_text: str) -> Dict[str, Computation]:
+    # pass 1: symbol table  op-name -> (output bytes, first shape dims)
+    sym_bytes: Dict[str, int] = {}
+    sym_dims: Dict[str, List[int]] = {}
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        name, rhs = d.group(1), d.group(2)
+        sym_bytes[name] = _shape_prefix_bytes(rhs)
+        dims = _shape_prefix_dims(rhs)
+        if dims:
+            sym_dims[name] = dims[0]
+    # parameters in computation headers also define names; ignore (their
+    # bytes only matter as operands of ops that read them, which resolve
+    # through get-tuple-element/parameter def lines inside the body).
+
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if _HEADER_RE.match(raw) and not raw.startswith(" "):
+            h = _HEADER_RE.match(raw)
+            cur = Computation(h.group(2), defaultdict(int),
+                              defaultdict(int), [], [])
+            cur.is_fusion_body = "fused" in cur.name
+            comps[cur.name] = cur
+            if h.group(1):
+                comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        for c in _CONST_RE.findall(line):
+            cur.max_constant = max(cur.max_constant, int(c))
+        d = _DEF_RE.match(line)
+        if not d:
+            continue
+        rhs = _COMMENT_RE.sub("", d.group(2))
+        opm = _OPNAME_RE.match(rhs)
+        opname = opm.group(1) if opm else ""
+
+        if opname == "dot":
+            out_numel = 1
+            for dim in sym_dims.get(d.group(1), []):
+                out_numel *= dim
+            args = rhs[opm.end(1):]
+            operands = _OPERAND_RE.findall(args.split("),")[0] + ")")
+            csize = 1
+            cm = _LHS_CONTRACT_RE.search(rhs)
+            if operands and cm is not None:
+                lhs_dims = sym_dims.get(operands[0], [])
+                for ci in (cm.group(1).split(",") if cm.group(1) else []):
+                    if int(ci) < len(lhs_dims):
+                        csize *= lhs_dims[int(ci)]
+            cur.dot_flops += 2.0 * out_numel * csize
+
+        if not cur.is_fusion_body:
+            cur.op_bytes += _op_traffic_bytes(opname, d.group(1), rhs, opm,
+                                              sym_bytes)
+
+        if opname == "while":
+            body = cond = None
+            for m2 in re.finditer(r"(condition|body)=%?([\w\.\-]+)", rhs):
+                if m2.group(1) == "condition":
+                    cond = m2.group(2)
+                else:
+                    body = m2.group(2)
+            tm = _TRIP_COUNT_RE.search(d.group(2))
+            trips = int(tm.group(1)) if tm else None
+            if body:
+                cur.while_calls.append((cond, body, trips))
+            continue
+        for cname in _CALL_RE.findall(rhs):
+            cur.other_calls.append(cname)
+        if opname.replace("-start", "") in COLLECTIVE_KINDS:
+            kind = opname.replace("-start", "")
+            b = sym_bytes.get(d.group(1), 0)
+            cur.collective_bytes[kind] += b
+            cur.collective_counts[kind] += 1
+    return comps
+
+
+def collective_summary(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Loop-corrected totals: collective bytes/counts, dot FLOPs, op bytes."""
+    comps = _parse_computations(hlo_text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"bytes": {}, "counts": {}, "total_bytes": 0,
+                "dot_flops": 0.0, "op_bytes": 0.0}
+
+    memo: Dict[str, Tuple] = {}
+
+    def walk(name: str, depth=0):
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        if comp is None or depth > 60:
+            return {}, {}, 0.0, 0.0
+        memo[name] = ({}, {}, 0.0, 0.0)       # cycle guard
+        bytes_ = dict(comp.collective_bytes)
+        counts = dict(comp.collective_counts)
+        flops = comp.dot_flops
+        obytes = comp.op_bytes
+        for cname in comp.other_calls:
+            if cname == name:
+                continue
+            # other_calls has one entry per call SITE — a fusion invoked from
+            # three sites executes three times, so count each occurrence
+            cb, cc, cf, cby = walk(cname, depth + 1)
+            for k, v in cb.items():
+                bytes_[k] = bytes_.get(k, 0) + v
+            for k, v in cc.items():
+                counts[k] = counts.get(k, 0) + v
+            flops += cf
+            obytes += cby
+        for cond, body, known_trips in comp.while_calls:
+            if known_trips:
+                trips = known_trips
+            elif cond in comps and comps[cond].max_constant > 0:
+                trips = comps[cond].max_constant
+            else:
+                trips = 1
+            cb, cc, cf, cby = walk(body, depth + 1)
+            for k, v in cb.items():
+                bytes_[k] = bytes_.get(k, 0) + v * trips
+            for k, v in cc.items():
+                counts[k] = counts.get(k, 0) + v * trips
+            flops += cf * trips
+            obytes += cby * trips
+        memo[name] = (bytes_, counts, flops, obytes)
+        return memo[name]
+
+    b, c, f, ob = walk(entry.name)
+    return {"bytes": b, "counts": c, "total_bytes": float(sum(b.values())),
+            "dot_flops": float(f), "op_bytes": float(ob)}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, collective_bytes: float,
+                   n_chips: int, peak_flops: float, hbm_bw: float,
+                   ici_bw: float) -> Dict[str, float]:
+    """The three roofline terms in seconds (global work over global capacity).
+
+    FLOPs/bytes from cost_analysis are per-partition program totals under
+    SPMD, so multiply by n_chips for globals — or equivalently treat
+    cost_analysis as per-chip and divide by per-chip capability. We use the
+    per-chip interpretation directly.
+    """
+    compute_s = flops / peak_flops
+    memory_s = hbm_bytes / hbm_bw
+    collective_s = collective_bytes / ici_bw
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+    }

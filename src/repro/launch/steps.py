@@ -1,0 +1,266 @@
+"""Step builders + ShapeDtypeStruct input specs for train / prefill / decode.
+
+Everything here is shape-level: ``input_specs`` returns ShapeDtypeStructs
+(weak-type-correct, shardable, zero allocation), and the ``make_*_step``
+functions return plain python callables ready for ``jax.jit(...,
+in_shardings=..., out_shardings=...)`` — used identically by the real
+launcher and the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape, RunConfig
+from repro.core import losses
+from repro.models import common
+from repro.models.transformer import Model, build_model
+from repro.optim import (Optimizer, adamw, adam, sgd, momentum,
+                         clip_by_global_norm, apply_updates, schedules)
+from repro.sharding.partition import logical_to_physical, DEFAULT_RULES
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jax.Array
+
+
+def make_optimizer(run: RunConfig) -> Optimizer:
+    lr = schedules.cosine(run.lr, run.total_steps, warmup=run.warmup)
+    if run.opt == "adamw":
+        return adamw(lr, weight_decay=run.weight_decay)
+    if run.opt == "adam":
+        return adam(lr)
+    if run.opt == "sgd":
+        return sgd(lr)
+    if run.opt == "momentum":
+        return momentum(lr)
+    raise ValueError(run.opt)
+
+
+# ---------------------------------------------------------------------------
+# Effective config per (arch, shape): long-context needs sub-quadratic attn.
+# ---------------------------------------------------------------------------
+
+def effective_config(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """Dense/MoE/VLM archs switch to the sliding-window variant for the
+    524k-token decode shape (DESIGN.md §5); SSM/hybrid run natively."""
+    if (shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid")
+            and cfg.attention == "full"):
+        return cfg.replace(attention="sliding", window=4096)
+    return cfg
+
+
+def skip_reason(cfg: ArchConfig, shape: InputShape) -> Optional[str]:
+    if shape.mode == "decode" and not cfg.has_decode:
+        return "encoder-only architecture: no autoregressive decode step"
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model inputs for one step, as ShapeDtypeStructs."""
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.mode == "train":
+        if cfg.input_kind == "embeddings":
+            return {
+                "embeddings": jax.ShapeDtypeStruct((B, T, cfg.d_model),
+                                                   jnp.dtype(cfg.dtype)),
+                "labels": jax.ShapeDtypeStruct((B, T), i32),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, T), i32),
+                "labels": jax.ShapeDtypeStruct((B, T), i32)}
+    if shape.mode == "prefill":
+        if cfg.input_kind == "embeddings":
+            return {"embeddings": jax.ShapeDtypeStruct(
+                (B, T, cfg.d_model), jnp.dtype(cfg.dtype))}
+        return {"tokens": jax.ShapeDtypeStruct((B, T), i32)}
+    if shape.mode == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B,), i32),
+                "pos": jax.ShapeDtypeStruct((), i32)}
+    raise ValueError(shape.mode)
+
+
+def batch_pspec(name: str, mesh: Mesh, shape_struct) -> P:
+    """PartitionSpec for one input leaf: batch dim over (pod, data)."""
+    logical = {
+        "tokens": ("batch",) if len(shape_struct.shape) == 1 else ("batch", "seq"),
+        "labels": ("batch", "seq"),
+        "embeddings": ("batch", "seq", None),
+        "pos": (),
+    }[name]
+    return logical_to_physical(logical, mesh, shape=shape_struct.shape)
+
+
+def input_shardings(specs, mesh: Mesh):
+    return {k: NamedSharding(mesh, batch_pspec(k, mesh, v))
+            for k, v in specs.items()}
+
+
+# ---------------------------------------------------------------------------
+# Parameter / state shardings
+# ---------------------------------------------------------------------------
+
+def param_shardings(model: Model, params_shape, mesh: Mesh):
+    """NamedShardings for the param tree from the model's logical axes."""
+    axes = model.logical_axes(
+        jax.tree.map(lambda x: None, params_shape))
+    return jax.tree.map(
+        lambda lg, shp: NamedSharding(
+            mesh, logical_to_physical(lg, mesh, shape=shp.shape)),
+        axes, params_shape, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def make_state_shardings(state_shape: TrainState, params_shape, pshard,
+                         mesh: Mesh) -> TrainState:
+    """Shard TrainState: params as given; opt moment buffers mirror params
+    by shape; scalars replicated."""
+    index = [(s.shape, sh) for s, sh in
+             zip(jax.tree.leaves(params_shape), jax.tree.leaves(pshard))]
+
+    def match(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        for shp, sh in index:
+            if shp == leaf.shape:
+                return sh
+        return NamedSharding(mesh, P())
+
+    return TrainState(
+        params=pshard,
+        opt_state=jax.tree.map(match, state_shape.opt_state),
+        step=NamedSharding(mesh, P()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def chunked_ce_loss(model: Model, params, h, labels, n_chunks: int = 8):
+    """Cross-entropy with seq-chunked unembedding (bounds live logits to
+    (B, T/n_chunks, V)); rematerialized in backward."""
+    cfg = model.cfg
+    B, T, d = h.shape
+    while T % n_chunks != 0:
+        n_chunks -= 1
+    hc = h.reshape(B, n_chunks, T // n_chunks, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n_chunks, T // n_chunks).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(h_k, l_k):
+        logits = common.unembed(params["embedding"], h_k, cfg)
+        return losses.softmax_cross_entropy(logits, l_k)
+
+    def body(acc, inp):
+        h_k, l_k = inp
+        return acc + chunk_loss(h_k, l_k), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / n_chunks
+
+
+def make_train_step(model: Model, opt: Optimizer, run: RunConfig,
+                    mesh: Optional[Mesh] = None, loss_chunks: int = 8):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        h, aux = model.hidden(params, batch, mesh=mesh, remat=run.remat)
+        ce = chunked_ce_loss(model, params, h, batch["labels"], loss_chunks)
+        total = ce + cfg.moe_aux_weight * aux["moe_aux"]
+        return total, {"ce": ce, "moe_aux": aux["moe_aux"]}
+
+    def train_step(state: TrainState, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch)
+        if run.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        else:
+            gnorm = jnp.zeros(())
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model, run: RunConfig, mesh=None):
+    def prefill_step(params, batch):
+        logits, aux = model.apply(params, batch, mesh=mesh, remat=False)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, run: RunConfig, mesh=None):
+    def serve_step(params, cache, batch):
+        logits, cache = model.decode_step(params, cache, batch["tokens"],
+                                          batch["pos"], mesh=mesh)
+        return logits, cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Cache specs/shardings for decode shapes
+# ---------------------------------------------------------------------------
+
+def cache_shape_structs(model: Model, shape: InputShape):
+    """ShapeDtypeStructs of the decode cache (no allocation)."""
+    return jax.eval_shape(
+        lambda: model.init_decode_cache(shape.global_batch, shape.seq_len))
+
+
+def cache_logical_axes(cfg: ArchConfig, mesh: Mesh):
+    """Logical axes for cache leaves, chosen per divisibility:
+    KV caches (B, S, K, Dh): shard K over model if divisible, else shard S
+    (flash-decoding); SSM states shard heads over model."""
+
+    def kv_axes(leaf_shape):
+        B, S, K, dh = leaf_shape
+        if K % mesh.shape["model"] == 0:
+            return ("batch", None, "kv_heads", None)
+        return ("batch", "cache_seq", None, None)
+
+    return kv_axes
+
+
+def cache_shardings(model: Model, cfg: ArchConfig, shape: InputShape,
+                    mesh: Mesh):
+    structs = cache_shape_structs(model, shape)
+    kv_axes = cache_logical_axes(cfg, mesh)
+
+    def leaf_sharding(path_leaf):
+        shp = path_leaf.shape
+        if len(shp) == 4 and shp[1] > 1 and shp[3] == cfg.dim_per_head:
+            lg = kv_axes(shp)
+        elif len(shp) == 5:
+            # stacked (L, B, S, K, Dh) KV caches / (L,B,H,p,n) ssm states
+            if shp[4] == cfg.dim_per_head and shp[2] > 8:
+                lg = (None,) + kv_axes(shp[1:])
+            else:
+                lg = (None, "batch", "heads", None, None)
+        elif len(shp) == 4:
+            lg = ("batch", "heads", None, None)      # ssm state (B,H,p,n)
+        elif len(shp) == 3:
+            lg = ("batch", None, None)               # conv history (B,W,C)
+        elif len(shp) == 2:
+            lg = ("batch", None)                     # rwkv x_prev (B,d)
+        else:
+            lg = tuple(None for _ in shp)
+        return NamedSharding(mesh, logical_to_physical(lg, mesh, shape=shp))
+
+    return jax.tree.map(leaf_sharding, structs)

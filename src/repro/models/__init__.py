@@ -1,0 +1,4 @@
+from repro.models.transformer import Model, build_model  # noqa: F401
+from repro.models import (  # noqa: F401
+    attention, common, mamba2, mlp, moe, rwkv6,
+)

@@ -1,0 +1,290 @@
+"""GQA/MQA attention with RoPE, optional QK-norm, sliding window, KV cache.
+
+Three execution paths:
+  * ``attend_naive``   — materializes (T, S) scores; short sequences/smoke.
+  * ``attend_chunked`` — flash-style streaming softmax over KV chunks inside
+                         a q-chunk ``lax.map``; O(chunk^2) live memory. This
+                         is the default for long-sequence prefill/training —
+                         mandatory at 32k+ where naive scores would be TBs.
+  * ``decode_attend``  — single-token query against a (ring-buffered) cache.
+
+Sliding-window caches are ring buffers of length ``window`` so long_500k
+decode holds O(window), not O(seq), state per layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.sharding import constrain
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_cache, K, Dh)
+    v: jax.Array          # (B, S_cache, K, Dh)
+
+
+def init_attention(cfg: ArchConfig, rng) -> dict:
+    d, H, K, dh = cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.dim_per_head
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": common.he_init(ks[0], (d, H, dh), d),
+        "wk": common.he_init(ks[1], (d, K, dh), d),
+        "wv": common.he_init(ks[2], (d, K, dh), d),
+        "wo": common.he_init(ks[3], (H, dh, d), H * dh),
+    }
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H, dh), jnp.float32)
+        p["bk"] = jnp.zeros((K, dh), jnp.float32)
+        p["bv"] = jnp.zeros((K, dh), jnp.float32)
+        p["bo"] = jnp.zeros((d,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), jnp.float32)
+        p["k_norm"] = jnp.ones((dh,), jnp.float32)
+    return p
+
+
+def logical_axes(cfg: ArchConfig) -> dict:
+    lg = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.attn_bias:
+        lg.update({"bq": ("heads", "head_dim"), "bk": ("kv_heads", "head_dim"),
+                   "bv": ("kv_heads", "head_dim"), "bo": ("embed",)})
+    if cfg.qk_norm:
+        lg.update({"q_norm": (None,), "k_norm": (None,)})
+    return lg
+
+
+def _rms(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def qkv_proj(p, x, positions, cfg: ArchConfig):
+    """x (B,T,d) -> q (B,T,H,Dh), k/v (B,T,K,Dh), RoPE applied."""
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dt))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = _rms(q, p["q_norm"])
+        k = _rms(k, p["k_norm"])
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k = common.apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+    return q, k, v
+
+
+def out_proj(p, ctx, cfg: ArchConfig):
+    """ctx (B,T,H,Dh) -> (B,T,d)."""
+    y = jnp.einsum("bthk,hkd->btd", ctx, p["wo"].astype(ctx.dtype))
+    if cfg.attn_bias:
+        y = y + p["bo"].astype(ctx.dtype)
+    return constrain(y, ("batch", "seq", None))
+
+
+def _group_q(q, n_kv):
+    """(B,T,H,Dh) -> (B,T,K,G,Dh) for GQA."""
+    B, T, H, dh = q.shape
+    return q.reshape(B, T, n_kv, H // n_kv, dh)
+
+
+def attend_naive(q, k, v, cfg: ArchConfig, q_offset: int = 0):
+    """Materialized-scores attention. q (B,T,H,Dh); k,v (B,S,K,Dh)."""
+    B, T, H, dh = q.shape
+    S = k.shape[1]
+    K = k.shape[2]
+    qg = _group_q(q, K)                                 # (B,T,K,G,Dh)
+    scale = 1.0 / np.sqrt(dh)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k) * scale
+    scores = scores.astype(jnp.float32)
+    qpos = jnp.arange(T) + q_offset
+    kpos = jnp.arange(S)
+    mask = jnp.ones((T, S), bool)
+    if cfg.causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if cfg.attention == "sliding":
+        mask &= kpos[None, :] > qpos[:, None] - cfg.window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    ctx = jnp.einsum("bkgts,bskd->btkgd", w, v)
+    return ctx.reshape(B, T, H, dh)
+
+
+def _seq_parallel_wanted(n_heads: int) -> bool:
+    """Context parallelism fallback: when the head count doesn't divide the
+    model axis, head-parallel attention replicates the full O(T^2) work on
+    every model rank (e.g. smollm's 9 heads on model=16). Sharding the
+    q-chunk/sequence dim instead splits the tiles across ranks."""
+    from repro.sharding.partition import _current_mesh
+    mesh = _current_mesh()
+    if mesh is None or "model" not in mesh.shape:
+        return False
+    return n_heads % mesh.shape["model"] != 0
+
+
+def attend_chunked(q, k, v, cfg: ArchConfig, q_chunk: int = 1024,
+                   kv_chunk: int = 1024):
+    """Flash-style streaming attention (self-attention over full sequence).
+
+    q (B,T,H,Dh), k/v (B,T,K,Dh). Causal and/or sliding-window masks applied
+    per (q-chunk, kv-chunk) tile; running max/denominator carried across kv
+    chunks so no (T, T) tensor is ever materialized.
+    """
+    B, T, H, dh = q.shape
+    K = k.shape[2]
+    q_chunk = min(q_chunk, T)
+    kv_chunk = min(kv_chunk, T)
+    nq, nk = T // q_chunk, T // kv_chunk
+    assert T % q_chunk == 0 and T % kv_chunk == 0, (T, q_chunk, kv_chunk)
+    scale = 1.0 / np.sqrt(dh)
+
+    qg = _group_q(q, K).reshape(B, nq, q_chunk, K, H // K, dh)
+    kc = k.reshape(B, nk, kv_chunk, K, dh)
+    vc = v.reshape(B, nk, kv_chunk, K, dh)
+    seq_par = _seq_parallel_wanted(H)
+
+    def one_q_chunk(qi):
+        qblk = qg[:, qi]                                 # (B,qc,K,G,Dh)
+        if seq_par:
+            # context parallelism: split each q chunk over the model axis
+            qblk = constrain(qblk, ("batch", "seq_sp", None, None, None))
+        qpos = qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kblk = jax.lax.dynamic_index_in_dim(kc, kj, 1, keepdims=False)
+            vblk = jax.lax.dynamic_index_in_dim(vc, kj, 1, keepdims=False)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk) * scale
+            s = s.astype(jnp.float32)                    # (B,K,G,qc,kc)
+            kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if cfg.causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if cfg.attention == "sliding":
+                mask &= kpos[None, :] > qpos[:, None] - cfg.window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = corr * l + jnp.sum(p, axis=-1)
+            acc_new = corr[..., None] * acc + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(q.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, H // K, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, K, H // K, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, K, H // K, q_chunk, dh), jnp.float32)
+        # checkpoint: backward recomputes the (qc, kc) score/prob tiles from
+        # the tiny running stats instead of saving them for every tile —
+        # this is what makes 32k-token training fit in HBM
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step),
+                                      (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # (B,K,G,qc,Dh) -> (B,qc,H,Dh)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, dh)
+        out = out.astype(q.dtype)
+        if seq_par:
+            out = constrain(out, ("batch", "seq_sp", None, None))
+        return out
+
+    out = jax.lax.map(one_q_chunk, jnp.arange(nq))       # (nq,B,qc,H,Dh)
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, T, H, dh)
+
+
+def attend(q, k, v, cfg: ArchConfig, chunked_threshold: int = 2048):
+    if q.shape[1] <= chunked_threshold:
+        return attend_naive(q, k, v, cfg)
+    return attend_chunked(q, k, v, cfg, q_chunk=cfg.attn_q_chunk,
+                          kv_chunk=cfg.attn_kv_chunk)
+
+
+# --------------------------------------------------------------------------
+# Decode path
+# --------------------------------------------------------------------------
+
+def cache_len(cfg: ArchConfig, max_seq: int) -> int:
+    return min(cfg.window, max_seq) if cfg.attention == "sliding" else max_seq
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    S = cache_len(cfg, max_seq)
+    K, dh = cfg.kv_heads, cfg.dim_per_head
+    return KVCache(k=jnp.zeros((batch, S, K, dh), dtype),
+                   v=jnp.zeros((batch, S, K, dh), dtype))
+
+
+def cache_update(cache: KVCache, k_new, v_new, pos, cfg: ArchConfig) -> KVCache:
+    """Insert one step's K/V (B,1,K,Dh) at position ``pos`` (ring-buffered
+    modulo the cache length for sliding windows)."""
+    S = cache.k.shape[1]
+    slot = pos % S
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype),
+                                            slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype),
+                                            slot, axis=1)
+    return KVCache(k=k, v=v)
+
+
+def decode_attend(p, x, cache: KVCache, pos, cfg: ArchConfig):
+    """One-token attention. x (B,1,d); pos scalar int (position of the new
+    token). Returns (out (B,1,d), updated cache)."""
+    B = x.shape[0]
+    dt = x.dtype
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    k_new = jnp.einsum("btd,dhk->bthk", x, p["wk"].astype(dt))
+    v_new = jnp.einsum("btd,dhk->bthk", x, p["wv"].astype(dt))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(dt)
+        k_new = k_new + p["bk"].astype(dt)
+        v_new = v_new + p["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = _rms(q, p["q_norm"])
+        k_new = _rms(k_new, p["k_norm"])
+    q = common.apply_rope(q, positions, cfg.rope_theta)
+    k_new = common.apply_rope(k_new, positions, cfg.rope_theta)
+
+    cache = cache_update(cache, k_new, v_new, pos, cfg)
+    S = cache.k.shape[1]
+    K = cache.k.shape[2]
+    H, dh = q.shape[2], q.shape[3]
+
+    # position held by each ring slot: largest p <= pos with p % S == slot
+    slots = jnp.arange(S)
+    slot_pos = pos - ((pos - slots) % S)
+    valid = slot_pos >= 0
+    if cfg.attention == "sliding":
+        valid &= slot_pos > pos - cfg.window
+    # (for full attention S == max_seq so slot_pos == slots <= pos check)
+    valid &= slot_pos <= pos
+
+    qg = q.reshape(B, 1, K, H // K, dh)
+    scale = 1.0 / np.sqrt(dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, cache.k.astype(dt)) * scale
+    scores = scores.astype(jnp.float32)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(dt)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", w, cache.v.astype(dt))
+    ctx = ctx.reshape(B, 1, H, dh)
+    out = out_proj(p, ctx, cfg)
+    return out, cache

@@ -1,0 +1,110 @@
+"""Shared model building blocks: norms, RoPE, initializers, embeddings.
+
+All modules are functional: ``init_*`` returns a param pytree, ``apply``-style
+functions are pure. Activation sharding uses logical-axis constraints from
+repro.sharding (no-ops outside a mesh context).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def normal_init(rng, shape, stddev, dtype=jnp.float32):
+    return stddev * jax.random.normal(rng, shape, dtype)
+
+
+def he_init(rng, shape, fan_in, dtype=jnp.float32):
+    return jax.random.normal(rng, shape, dtype) / np.sqrt(fan_in)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def init_norm(cfg: ArchConfig, d: int):
+    if cfg.norm_kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(p, x, cfg: ArchConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"] + p["bias"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., T, H, Dh) — rotate pairs. positions: (..., T) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., T, Dh/2)
+    cos = jnp.cos(ang)[..., None, :]                    # (..., T, 1, Dh/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def init_embedding(cfg: ArchConfig, rng) -> dict:
+    p = {"tok": normal_init(rng, (cfg.vocab_size, cfg.d_model), 0.02)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = normal_init(jax.random.fold_in(rng, 1),
+                                   (cfg.d_model, cfg.vocab_size), 0.02)
+    if cfg.input_kind == "embeddings":
+        # projector from the (stubbed) modality frontend's embedding space
+        p["frontend_proj"] = he_init(jax.random.fold_in(rng, 2),
+                                     (cfg.d_model, cfg.d_model), cfg.d_model)
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ArchConfig, dtype):
+    x = jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dtype)
+    return x
+
+
+def embed_frontend(p, embeddings, cfg: ArchConfig, dtype):
+    """Modality carve-out: precomputed frame/patch embeddings -> d_model."""
+    return (embeddings.astype(dtype) @ p["frontend_proj"].astype(dtype))
+
+
+def unembed(p, x, cfg: ArchConfig):
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    return x @ w.astype(x.dtype)
+
+
+def logical_axes_embedding(cfg: ArchConfig) -> dict:
+    lg = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        lg["unembed"] = ("embed", "vocab")
+    if cfg.input_kind == "embeddings":
+        lg["frontend_proj"] = ("embed", "embed2")
+    return lg

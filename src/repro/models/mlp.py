@@ -1,0 +1,76 @@
+"""MLP variants: SwiGLU / GeGLU / plain GELU, and the RWKV channel-mix."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.sharding import constrain
+
+
+def init_mlp(cfg: ArchConfig, rng) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": common.he_init(ks[0], (d, f), d),
+            "w_up": common.he_init(ks[1], (d, f), d),
+            "w_down": common.he_init(ks[2], (f, d), f),
+        }
+    if cfg.mlp_kind == "gelu":
+        return {
+            "w_up": common.he_init(ks[0], (d, f), d),
+            "b_up": jnp.zeros((f,), jnp.float32),
+            "w_down": common.he_init(ks[1], (f, d), f),
+            "b_down": jnp.zeros((d,), jnp.float32),
+        }
+    if cfg.mlp_kind == "rwkv_channel_mix":
+        return {
+            "mix_k": 0.5 * jnp.ones((d,), jnp.float32),
+            "w_k": common.he_init(ks[0], (d, f), d),
+            "w_v": common.he_init(ks[1], (f, d), f),
+            "mix_r": 0.5 * jnp.ones((d,), jnp.float32),
+            "w_r": common.he_init(ks[2], (d, d), d),
+        }
+    raise ValueError(cfg.mlp_kind)
+
+
+def logical_axes(cfg: ArchConfig) -> dict:
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {"w_gate": ("embed", "ffn"), "w_up": ("embed", "ffn"),
+                "w_down": ("ffn", "embed")}
+    if cfg.mlp_kind == "gelu":
+        return {"w_up": ("embed", "ffn"), "b_up": ("ffn",),
+                "w_down": ("ffn", "embed"), "b_down": ("embed",)}
+    return {"mix_k": (None,), "w_k": ("embed", "ffn"), "w_v": ("ffn", "embed"),
+            "mix_r": (None,), "w_r": ("embed", "embed2")}
+
+
+def apply_mlp(p, x, cfg: ArchConfig, x_prev=None):
+    """x (B,T,d). ``x_prev`` is the token-shifted input (rwkv channel mix)."""
+    dt = x.dtype
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else partial_gelu
+        g = act(x @ p["w_gate"].astype(dt))
+        u = x @ p["w_up"].astype(dt)
+        h = constrain(g * u, ("batch", "seq", "ffn"))
+        return h @ p["w_down"].astype(dt)
+    if cfg.mlp_kind == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+        h = constrain(h, ("batch", "seq", "ffn"))
+        return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)
+    if cfg.mlp_kind == "rwkv_channel_mix":
+        assert x_prev is not None, "rwkv channel mix needs token shift"
+        xk = x + (x_prev - x) * p["mix_k"].astype(dt)
+        xr = x + (x_prev - x) * p["mix_r"].astype(dt)
+        k = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(dt)))
+        k = constrain(k, ("batch", "seq", "ffn"))
+        r = jax.nn.sigmoid(xr @ p["w_r"].astype(dt))
+        return r * (k @ p["w_v"].astype(dt))
+    raise ValueError(cfg.mlp_kind)
+
+
+def partial_gelu(x):
+    return jax.nn.gelu(x, approximate=True)

@@ -1,0 +1,236 @@
+"""RWKV-6 "Finch" time-mix block — attention-free, data-dependent decay.
+
+Per head (key/value dims p), with receptance r, key k, value v, per-channel
+data-dependent decay w_t (the Finch contribution) and bonus u:
+
+    y_t = r_t^T (diag(u) k_t v_t^T + S_{t-1})
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+Training/prefill uses a chunked evaluation (scan over chunks; intra-chunk
+attention-like einsum with cumulative log decays, inter-chunk state carry) —
+the TPU-idiomatic form. Decode is the exact recurrence.
+
+Simplifications vs the released model (noted in DESIGN.md): static token-shift
+mix vectors (full ddlerp omitted); decay LoRA retained since data-dependent
+decay is the paper's headline feature. Channel-mix lives in models/mlp.py.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+
+
+class RWKVCache(NamedTuple):
+    S: jax.Array          # (B, H, pk, pv) wkv state
+    x_att: jax.Array      # (B, d) previous token (time-mix shift)
+    x_ffn: jax.Array      # (B, d) previous token (channel-mix shift)
+
+
+def _dims(cfg: ArchConfig):
+    H = cfg.n_heads
+    p = cfg.dim_per_head
+    return H, p
+
+
+def init_rwkv6(cfg: ArchConfig, rng) -> dict:
+    d = cfg.d_model
+    H, p = _dims(cfg)
+    lora = max(32, d // 32)
+    ks = jax.random.split(rng, 10)
+    return {
+        "mix_r": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_k": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_v": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_w": 0.5 * jnp.ones((d,), jnp.float32),
+        "mix_g": 0.5 * jnp.ones((d,), jnp.float32),
+        "w_r": common.he_init(ks[0], (d, d), d),
+        "w_k": common.he_init(ks[1], (d, d), d),
+        "w_v": common.he_init(ks[2], (d, d), d),
+        "w_g": common.he_init(ks[3], (d, d), d),
+        # data-dependent decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": -6.0 + 0.5 * jax.random.normal(ks[4], (d,), jnp.float32),
+        "w_lora_a": common.he_init(ks[5], (d, lora), d),
+        "w_lora_b": 0.01 * jax.random.normal(ks[6], (lora, d), jnp.float32),
+        "u": 0.5 * jax.random.normal(ks[7], (H, p), jnp.float32),
+        "ln_scale": jnp.ones((d,), jnp.float32),   # per-head group norm scale
+        "w_o": common.he_init(ks[8], (d, d), d),
+    }
+
+
+def logical_axes(cfg: ArchConfig) -> dict:
+    return {
+        "mix_r": (None,), "mix_k": (None,), "mix_v": (None,), "mix_w": (None,),
+        "mix_g": (None,),
+        "w_r": ("embed", "heads_flat"), "w_k": ("embed", "heads_flat"),
+        "w_v": ("embed", "heads_flat"), "w_g": ("embed", "heads_flat"),
+        "w0": (None,), "w_lora_a": ("embed", None), "w_lora_b": (None, None),
+        "u": ("heads", None), "ln_scale": (None,), "w_o": ("heads_flat", "embed"),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: x_{t-1} with x_prev filling t=0. x (B,T,d), x_prev (B,d)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _mix_heads(p, x, x_prev, cfg: ArchConfig):
+    """Compute r,k,v,g,(log)w from token-shifted mixes. Returns heads layout."""
+    B, T, d = x.shape
+    H, ph = _dims(cfg)
+    dt = x.dtype
+    xs = _shift(x, x_prev)
+
+    def mix(m):
+        return x + (xs - x) * p[m].astype(dt)
+
+    r = (mix("mix_r") @ p["w_r"].astype(dt)).reshape(B, T, H, ph)
+    k = (mix("mix_k") @ p["w_k"].astype(dt)).reshape(B, T, H, ph)
+    v = (mix("mix_v") @ p["w_v"].astype(dt)).reshape(B, T, H, ph)
+    g = jax.nn.silu(mix("mix_g") @ p["w_g"].astype(dt))          # (B,T,d)
+    xw = mix("mix_w").astype(jnp.float32)
+    lw = p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]  # (B,T,d)
+    # clamp so per-token log-decay is in [-5, 0): w <= e^-5 is already ~fully
+    # forgotten after 2 tokens, and the bound keeps the chunked form's
+    # exp(+/-W) factors inside f32 range (see apply_rwkv6)
+    logw = -jnp.exp(jnp.clip(lw, -20.0, 1.609))                  # log decay < 0
+    logw = logw.reshape(B, T, H, ph)
+    return r, k, v, g, logw
+
+
+def _group_norm(y, scale, cfg: ArchConfig, eps=64e-5):
+    """Per-head LayerNorm (RWKV 'ln_x'). y (B,T,H,p)."""
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    B, T, H, p = y.shape
+    return (yn.reshape(B, T, H * p) * scale).astype(y.dtype)
+
+
+def apply_rwkv6(p, x, cfg: ArchConfig, x_prev=None, chunk: int = 32):
+    """Training/prefill forward. x (B,T,d) -> (B,T,d).
+
+    x_prev (B,d): last token of the previous segment (zeros at sequence start).
+    """
+    B, T, d = x.shape
+    H, ph = _dims(cfg)
+    dtype = x.dtype
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), dtype)
+
+    r, k, v, g, logw = _mix_heads(p, x, x_prev, cfg)
+    u = p["u"]                                                   # (H,p)
+
+    rc = r.reshape(B, nc, chunk, H, ph).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nc, chunk, H, ph).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, H, ph).transpose(1, 0, 2, 3, 4)
+    wc = logw.reshape(B, nc, chunk, H, ph).transpose(1, 0, 2, 3, 4)
+
+    def chunk_step(S, inp):
+        r_k, k_k, v_k, lw_k = inp                    # (B,Q,H,p*)
+        r_f = r_k.astype(jnp.float32)
+        k_f = k_k.astype(jnp.float32)
+        v_f = v_k.astype(jnp.float32)
+        W = jnp.cumsum(lw_k, axis=1)                 # (B,Q,H,pk) inclusive
+        Wm1 = W - lw_k                               # exclusive (up to t-1)
+        # inter-chunk: y_t += (r_t * exp(Wm1_t))^T S_prev  (Wm1 <= 0, safe)
+        y_inter = jnp.einsum("bqhk,bhkv->bqhv", r_f * jnp.exp(Wm1), S)
+        # intra-chunk (s < t): A[t,s] = sum_k r_t,k k_s,k exp(Wm1_t - W_s)
+        #   = sum_k (r_t,k e^{Wm1_t-c}) (k_s,c e^{c-W_s}); centering by
+        #   c = W_last/2 keeps both factors inside f32 range for chunk<=32
+        c = 0.5 * W[:, -1]                           # (B,H,pk)
+        rdec = r_f * jnp.exp(Wm1 - c[:, None])
+        kdec = k_f * jnp.exp(c[:, None] - W)
+        att = jnp.einsum("bqhk,bshk->bhqs", rdec, kdec)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhqs,bshv->bqhv", att, v_f)
+        # current-token bonus: (r_t . (u * k_t)) v_t
+        bonus = jnp.einsum("bqhk,hk,bqhk->bqh", r_f, u, k_f)
+        y_bonus = bonus[..., None] * v_f
+        # state: S_new = diag(exp(W_last)) S + sum_s e^{W_last - W_s} k_s v_s^T
+        W_last = W[:, -1]                            # (B,H,pk)
+        ksrc = k_f * jnp.exp(W_last[:, None] - W)
+        S_new = (jnp.exp(W_last)[..., None] * S
+                 + jnp.einsum("bshk,bshv->bhkv", ksrc, v_f))
+        return S_new, y_inter + y_intra + y_bonus
+
+    S0 = jnp.zeros((B, H, ph, ph), jnp.float32)
+    # checkpoint: recompute intra-chunk tiles in backward (see mamba2.py)
+    S_fin, ys = jax.lax.scan(jax.checkpoint(chunk_step), S0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, ph)
+    y = _group_norm(y, p["ln_scale"], cfg)                       # (B,T,d)
+    y = (y * g).astype(dtype)
+    return y @ p["w_o"].astype(dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> RWKVCache:
+    H, ph = _dims(cfg)
+    return RWKVCache(
+        S=jnp.zeros((batch, H, ph, ph), jnp.float32),
+        x_att=jnp.zeros((batch, cfg.d_model), dtype),
+        x_ffn=jnp.zeros((batch, cfg.d_model), dtype))
+
+
+def decode_step(p, x, cache: RWKVCache, cfg: ArchConfig):
+    """Exact single-token recurrence. x (B,1,d)."""
+    B, _, d = x.shape
+    H, ph = _dims(cfg)
+    dtype = x.dtype
+    r, k, v, g, logw = _mix_heads(p, x, cache.x_att.astype(dtype), cfg)
+    r_f = r[:, 0].astype(jnp.float32)                 # (B,H,p)
+    k_f = k[:, 0].astype(jnp.float32)
+    v_f = v[:, 0].astype(jnp.float32)
+    w_f = jnp.exp(logw[:, 0])                         # (B,H,p) decay
+    u = p["u"]
+
+    kv = jnp.einsum("bhk,bhv->bhkv", k_f, v_f)
+    y = jnp.einsum("bhk,bhkv->bhv", r_f, u[None, :, :, None] * kv + cache.S)
+    S_new = w_f[..., None] * cache.S + kv
+
+    y = y[:, None]                                    # (B,1,H,p)
+    y = _group_norm(y.reshape(B, 1, H, ph), p["ln_scale"], cfg)
+    y = (y * g).astype(dtype)
+    out = y @ p["w_o"].astype(dtype)
+    return out, RWKVCache(S=S_new, x_att=x[:, 0], x_ffn=cache.x_ffn)
+
+
+# ---------------------------------------------------------------------------
+# Reference: exact token-by-token recurrence (oracle for the chunked form).
+# ---------------------------------------------------------------------------
+
+def apply_rwkv6_ref(p, x, cfg: ArchConfig, x_prev=None):
+    B, T, d = x.shape
+    H, ph = _dims(cfg)
+    if x_prev is None:
+        x_prev = jnp.zeros((B, d), x.dtype)
+    r, k, v, g, logw = _mix_heads(p, x, x_prev, cfg)
+    u = p["u"]
+
+    def step(S, t_in):
+        r_t, k_t, v_t, lw_t = t_in                    # (B,H,p)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       u[None, :, :, None] * kv + S)
+        S = jnp.exp(lw_t)[..., None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((B, H, ph, ph), jnp.float32)
+    seq = (r.transpose(1, 0, 2, 3).astype(jnp.float32),
+           k.transpose(1, 0, 2, 3).astype(jnp.float32),
+           v.transpose(1, 0, 2, 3).astype(jnp.float32),
+           logw.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(step, S0, seq)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, H, ph)
+    y = _group_norm(y.reshape(B, T, H, ph), p["ln_scale"], cfg)
+    y = (y * g).astype(x.dtype)
+    return y @ p["w_o"].astype(x.dtype)

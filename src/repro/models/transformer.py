@@ -1,0 +1,408 @@
+"""Backbone assembly: scan-over-layers decoder/encoder for every family.
+
+Families map to per-layer block kinds:
+  dense / moe / vlm / audio -> attention block (+ MLP or MoE)
+  ssm (rwkv6)               -> rwkv6 time-mix + channel-mix
+  hybrid (zamba2)           -> mamba2 blocks with a *shared* attention block
+                               applied every ``shared_attn_every`` layers
+
+Layer parameters are stacked along a leading ``layers`` axis and executed
+with ``lax.scan`` (bounded HLO size and compile time for the 40+ dry-run
+configs). ``remat=True`` checkpoints each layer.
+
+Public surface (functional):
+    model = build_model(cfg)
+    params = model.init(rng)
+    logits, aux = model.apply(params, batch, mesh=..., remat=...)
+    cache = model.init_decode_cache(batch_size, max_seq)
+    logits, cache = model.decode_step(params, cache, tokens, pos, mesh=...)
+    emb = model.embed_pool(params, batch)   # pooled embeddings for DML
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, common, mamba2, mlp, moe, rwkv6
+from repro.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# Per-layer blocks
+# ---------------------------------------------------------------------------
+
+def _init_attn_block(cfg: ArchConfig, rng) -> dict:
+    ks = jax.random.split(rng, 4)
+    p = {"norm1": common.init_norm(cfg, cfg.d_model),
+         "attn": attention.init_attention(cfg, ks[0])}
+    if not cfg.parallel_block:
+        p["norm2"] = common.init_norm(cfg, cfg.d_model)
+    if cfg.n_experts and cfg.family == "moe":
+        p["moe"] = moe.init_moe(cfg, ks[1])
+    else:
+        p["mlp"] = mlp.init_mlp(cfg, ks[1])
+    return p
+
+
+def _init_rwkv_block(cfg: ArchConfig, rng) -> dict:
+    ks = jax.random.split(rng, 2)
+    return {"norm1": common.init_norm(cfg, cfg.d_model),
+            "tmix": rwkv6.init_rwkv6(cfg, ks[0]),
+            "norm2": common.init_norm(cfg, cfg.d_model),
+            "cmix": mlp.init_mlp(cfg, ks[1])}
+
+
+def _init_mamba_block(cfg: ArchConfig, rng) -> dict:
+    return {"norm1": common.init_norm(cfg, cfg.d_model),
+            "mamba": mamba2.init_mamba2(cfg, rng)}
+
+
+def _apply_attn_block(p, x, cfg: ArchConfig, mesh=None, positions=None):
+    """Full-sequence attention block. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = common.apply_norm(p["norm1"], x, cfg)
+    q, k, v = attention.qkv_proj(p["attn"], h, positions, cfg)
+    ctx = attention.attend(q, k, v, cfg)
+    att_out = attention.out_proj(p["attn"], ctx, cfg)
+    if cfg.parallel_block:
+        mlp_out = mlp.apply_mlp(p["mlp"], h, cfg)
+        return x + att_out + mlp_out, aux
+    x = x + att_out
+    h2 = common.apply_norm(p["norm2"], x, cfg)
+    if "moe" in p:
+        y, aux = moe.apply_moe(p["moe"], h2, cfg, mesh=mesh)
+    else:
+        y = mlp.apply_mlp(p["mlp"], h2, cfg)
+    return x + y, aux
+
+
+def _decode_attn_block(p, x, cache, pos, cfg: ArchConfig, mesh=None):
+    aux = jnp.zeros((), jnp.float32)
+    h = common.apply_norm(p["norm1"], x, cfg)
+    att_out, cache = attention.decode_attend(p["attn"], h, cache, pos, cfg)
+    if cfg.parallel_block:
+        mlp_out = mlp.apply_mlp(p["mlp"], h, cfg)
+        return x + att_out + mlp_out, cache, aux
+    x = x + att_out
+    h2 = common.apply_norm(p["norm2"], x, cfg)
+    if "moe" in p:
+        y, aux = moe.apply_moe(p["moe"], h2, cfg, mesh=mesh)
+    else:
+        y = mlp.apply_mlp(p["mlp"], h2, cfg)
+    return x + y, cache, aux
+
+
+def _apply_rwkv_block(p, x, cfg: ArchConfig):
+    h = common.apply_norm(p["norm1"], x, cfg)
+    x = x + rwkv6.apply_rwkv6(p["tmix"], h, cfg)
+    h2 = common.apply_norm(p["norm2"], x, cfg)
+    h2_prev = jnp.concatenate([jnp.zeros_like(h2[:, :1]), h2[:, :-1]], axis=1)
+    x = x + mlp.apply_mlp(p["cmix"], h2, cfg, x_prev=h2_prev)
+    return x
+
+
+def _decode_rwkv_block(p, x, cache: rwkv6.RWKVCache, cfg: ArchConfig):
+    h = common.apply_norm(p["norm1"], x, cfg)
+    y, cache = rwkv6.decode_step(p["tmix"], h, cache, cfg)
+    x = x + y
+    h2 = common.apply_norm(p["norm2"], x, cfg)
+    x = x + mlp.apply_mlp(p["cmix"], h2, cfg,
+                          x_prev=cache.x_ffn[:, None].astype(x.dtype))
+    cache = cache._replace(x_ffn=h2[:, 0])
+    return x, cache
+
+
+def _apply_mamba_block(p, x, cfg: ArchConfig):
+    h = common.apply_norm(p["norm1"], x, cfg)
+    return x + mamba2.apply_mamba2(p["mamba"], h, cfg)
+
+
+def _decode_mamba_block(p, x, cache, cfg: ArchConfig):
+    h = common.apply_norm(p["norm1"], x, cfg)
+    y, cache = mamba2.decode_step(p["mamba"], h, cache, cfg)
+    return x + y, cache
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ----- init -----
+
+    def init(self, rng) -> dict:
+        cfg = self.cfg
+        k_emb, k_blocks, k_shared, k_final = jax.random.split(rng, 4)
+        block_init = {
+            "rwkv6": _init_rwkv_block,
+            "mamba2": _init_mamba_block,
+            "attn": _init_attn_block,
+        }[cfg.block_kind if cfg.family in ("ssm", "hybrid") else "attn"]
+        layer_keys = jax.random.split(k_blocks, cfg.n_layers)
+        blocks = jax.vmap(lambda k: block_init(cfg, k))(layer_keys)
+        params = {
+            "embedding": common.init_embedding(cfg, k_emb),
+            "blocks": blocks,
+            "final_norm": common.init_norm(cfg, cfg.d_model),
+        }
+        if cfg.shared_attn_every:
+            shared_cfg = self._shared_cfg()
+            params["shared"] = _init_attn_block(shared_cfg, k_shared)
+        return params
+
+    def _shared_cfg(self) -> ArchConfig:
+        """Config view for zamba2's shared attention block (windowed full
+        attention + gelu MLP at d_model)."""
+        cfg = self.cfg
+        return cfg.replace(block_kind="attn", n_experts=0,
+                           attention="sliding",
+                           window=cfg.shared_attn_window,
+                           mlp_kind="gelu", family="dense")
+
+    # ----- full-sequence forward (train / prefill) -----
+
+    def apply(self, params, batch: Dict[str, Any], mesh=None,
+              remat: bool = False):
+        """Returns (logits (B,T,V), aux dict)."""
+        h, aux = self.hidden(params, batch, mesh=mesh, remat=remat)
+        logits = common.unembed(params["embedding"], h, self.cfg)
+        logits = constrain(logits, ("batch", "seq", "vocab"))
+        return logits, aux
+
+    def hidden(self, params, batch: Dict[str, Any], mesh=None,
+               remat: bool = False):
+        """Final normed hidden states (B,T,d) + aux — callers that want
+        memory-bounded losses unembed in sequence chunks themselves."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = self._embed_inputs(params, batch, dtype)
+        B, T, _ = x.shape
+        positions = jnp.arange(T, dtype=jnp.int32)[None, :].repeat(B, 0)
+        x = constrain(x, ("batch", "seq_sp", None))
+
+        h, aux = self._run_blocks(params, x, cfg, mesh, remat, positions)
+        h = common.apply_norm(params["final_norm"], h, cfg)
+        return h, {"moe_aux": aux}
+
+    def _embed_inputs(self, params, batch, dtype):
+        cfg = self.cfg
+        if cfg.input_kind == "embeddings" and "embeddings" in batch:
+            return common.embed_frontend(params["embedding"],
+                                         batch["embeddings"], cfg, dtype)
+        return common.embed_tokens(params["embedding"], batch["tokens"],
+                                   cfg, dtype)
+
+    def _run_blocks(self, params, x, cfg, mesh, remat, positions):
+        if cfg.family == "ssm":
+            def body(carry, p_l):
+                y = _apply_rwkv_block(p_l, carry, cfg)
+                return constrain(y, ("batch", "seq_sp", None)), None
+        elif cfg.family == "hybrid":
+            return self._run_hybrid(params, x, cfg, mesh, remat, positions)
+        else:
+            def body(carry, p_l):
+                y, aux = _apply_attn_block(p_l, carry, cfg, mesh, positions)
+                return constrain(y, ("batch", "seq_sp", None)), aux
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, auxs = jax.lax.scan(body, x, params["blocks"])
+        aux = jnp.zeros((), jnp.float32) if auxs is None else jnp.sum(auxs)
+        return x, aux
+
+    def _run_hybrid(self, params, x, cfg, mesh, remat, positions):
+        """Zamba2: groups of mamba layers + the shared attention block."""
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        shared_cfg = self._shared_cfg()
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]),
+            params["blocks"])
+
+        def inner(carry, p_l):
+            return _apply_mamba_block(p_l, carry, cfg), None
+
+        if remat:
+            inner = jax.checkpoint(inner)
+
+        def group_body(carry, p_g):
+            h, _ = jax.lax.scan(inner, carry, p_g)
+            h2, _ = _apply_attn_block(params["shared"], h, shared_cfg,
+                                      mesh, positions)
+            return constrain(h2, ("batch", "seq_sp", None)), None
+
+        if remat:
+            # checkpoint the whole group too: without this the 9 shared-
+            # attention invocations keep their flash carries/residuals live
+            # for the entire backward pass
+            group_body = jax.checkpoint(group_body)
+        x, _ = jax.lax.scan(group_body, x, grouped)
+        return x, jnp.zeros((), jnp.float32)
+
+    # ----- decode -----
+
+    def init_decode_cache(self, batch: int, max_seq: int,
+                          dtype=None) -> dict:
+        cfg = self.cfg
+        if dtype is None:
+            dtype = jnp.dtype(cfg.dtype)
+        if not cfg.has_decode:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+        L = cfg.n_layers
+        stack = lambda c: jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), c)
+        if cfg.family == "ssm":
+            cache = {"blocks": stack(rwkv6.init_cache(cfg, batch, dtype))}
+        elif cfg.family == "hybrid":
+            every = cfg.shared_attn_every
+            n_groups = cfg.n_layers // every
+            shared_cfg = self._shared_cfg()
+            mcache = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (L,) + a.shape),
+                mamba2.init_cache(cfg, batch, dtype))
+            scache = jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (n_groups,) + a.shape),
+                attention.init_cache(shared_cfg, batch, max_seq, dtype))
+            cache = {"blocks": mcache, "shared": scache}
+        else:
+            cache = {"blocks": stack(
+                attention.init_cache(cfg, batch, max_seq, dtype))}
+        return cache
+
+    def decode_step(self, params, cache: dict, tokens, pos, mesh=None):
+        """tokens (B,) or (B,1) int32; pos scalar int32 (current position).
+        Returns (logits (B,V), new cache)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        if tokens.ndim == 1:
+            tokens = tokens[:, None]
+        x = common.embed_tokens(params["embedding"], tokens, cfg, dtype)
+
+        if cfg.family == "ssm":
+            def body(carry, pc):
+                p_l, c_l = pc
+                y, c_new = _decode_rwkv_block(p_l, carry, c_l, cfg)
+                return y, c_new
+            x, new_blocks = jax.lax.scan(body, x,
+                                         (params["blocks"], cache["blocks"]))
+            new_cache = {"blocks": new_blocks}
+        elif cfg.family == "hybrid":
+            x, new_cache = self._decode_hybrid(params, cache, x, pos, cfg, mesh)
+        else:
+            def body(carry, pc):
+                p_l, c_l = pc
+                y, c_new, _ = _decode_attn_block(p_l, carry, c_l, pos, cfg, mesh)
+                return y, c_new
+            x, new_blocks = jax.lax.scan(body, x,
+                                         (params["blocks"], cache["blocks"]))
+            new_cache = {"blocks": new_blocks}
+
+        h = common.apply_norm(params["final_norm"], x, cfg)
+        logits = common.unembed(params["embedding"], h, cfg)
+        return logits[:, 0], new_cache
+
+    def _decode_hybrid(self, params, cache, x, pos, cfg, mesh):
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        shared_cfg = self._shared_cfg()
+        grouped = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]),
+            params["blocks"])
+        gcache = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]),
+            cache["blocks"])
+
+        def inner(carry, pc):
+            p_l, c_l = pc
+            y, c_new = _decode_mamba_block(p_l, carry, c_l, cfg)
+            return y, c_new
+
+        def group_body(carry, pcs):
+            p_g, c_g, sc = pcs
+            h, c_new = jax.lax.scan(inner, carry, (p_g, c_g))
+            h2, sc_new, _ = _decode_attn_block(params["shared"], h, sc, pos,
+                                               shared_cfg, mesh)
+            return h2, (c_new, sc_new)
+
+        x, (new_blocks, new_shared) = jax.lax.scan(
+            group_body, x, (grouped, gcache, cache["shared"]))
+        new_blocks = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_blocks)
+        return x, {"blocks": new_blocks, "shared": new_shared}
+
+    # ----- pooled embeddings (DML integration) -----
+
+    def embed_pool(self, params, batch, mesh=None):
+        """Mean-pooled final hidden state (B, d_model) — the embedding the
+        DML metric head consumes (DESIGN.md §4, modes 2/3)."""
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = self._embed_inputs(params, batch, dtype)
+        B, T, _ = x.shape
+        positions = jnp.arange(T, dtype=jnp.int32)[None, :].repeat(B, 0)
+        h, _ = self._run_blocks(params, x, cfg, mesh, False, positions)
+        h = common.apply_norm(params["final_norm"], h, cfg)
+        return jnp.mean(h.astype(jnp.float32), axis=1)
+
+    # ----- logical sharding axes -----
+
+    def logical_axes(self, params) -> Any:
+        """Pytree matching params with logical-axis tuples at each leaf.
+        Stacked block leaves get a leading 'layers' axis."""
+        cfg = self.cfg
+
+        def block_axes(shared: bool):
+            bcfg = self._shared_cfg() if shared else cfg
+            if not shared and cfg.family == "ssm":
+                ax = {"norm1": {"scale": (None,)},
+                      "tmix": rwkv6.logical_axes(cfg),
+                      "norm2": {"scale": (None,)},
+                      "cmix": mlp.logical_axes(cfg)}
+                if cfg.norm_kind == "layernorm":
+                    ax["norm1"]["bias"] = (None,)
+                    ax["norm2"]["bias"] = (None,)
+                return ax
+            if not shared and cfg.family == "hybrid":
+                return {"norm1": _norm_axes(cfg),
+                        "mamba": mamba2.logical_axes(cfg)}
+            ax = {"norm1": _norm_axes(bcfg),
+                  "attn": attention.logical_axes(bcfg)}
+            if not bcfg.parallel_block:
+                ax["norm2"] = _norm_axes(bcfg)
+            if bcfg.n_experts and bcfg.family == "moe":
+                ax["moe"] = moe.logical_axes(bcfg)
+            else:
+                ax["mlp"] = mlp.logical_axes(bcfg)
+            return ax
+
+        def add_layers(tree):
+            return jax.tree.map(lambda lg: ("layers",) + tuple(lg), tree,
+                                is_leaf=lambda x: isinstance(x, tuple))
+
+        axes = {
+            "embedding": common.logical_axes_embedding(cfg),
+            "blocks": add_layers(block_axes(False)),
+            "final_norm": _norm_axes(cfg),
+        }
+        if cfg.shared_attn_every:
+            axes["shared"] = block_axes(True)
+        return axes
+
+
+def _norm_axes(cfg: ArchConfig) -> dict:
+    if cfg.norm_kind == "rmsnorm":
+        return {"scale": (None,)}
+    return {"scale": (None,), "bias": (None,)}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg)

@@ -1,0 +1,128 @@
+"""Hand-rolled optimizers (no optax offline) with an optax-like interface:
+
+    opt = adam(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All transforms are pure pytree functions — jit/pjit/shard_map friendly. The
+PS server-side optimizer (paper §4.2 "update thread") is just one of these
+applied to aggregated gradients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step: jax.Array) -> jax.Array:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Optional[Any]], Any]  # (grads, state, params)
+
+
+class ScaleState(NamedTuple):
+    step: jax.Array
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return ScaleState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        updates = jax.tree.map(lambda g: -lr_t * g, grads)
+        return updates, ScaleState(step=step)
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    step: jax.Array
+    mu: Any
+
+
+def momentum(lr: Schedule, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return MomentumState(step=jnp.zeros((), jnp.int32),
+                             mu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        mu = jax.tree.map(lambda m, g: beta * m + g, state.mu, grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -lr_t * (beta * m + g), mu, grads)
+        else:
+            upd = jax.tree.map(lambda m: -lr_t * m, mu)
+        return upd, MomentumState(step=step, mu=mu)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adam(lr: Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8) -> Optimizer:
+    return _adam_impl(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    return _adam_impl(lr, b1, b2, eps, weight_decay=weight_decay)
+
+
+def _adam_impl(lr, b1, b2, eps, weight_decay) -> Optimizer:
+    def init(params):
+        return AdamState(step=jnp.zeros((), jnp.int32),
+                         m=jax.tree.map(jnp.zeros_like, params),
+                         v=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = _lr_at(lr, step)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state.m, grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                         state.v, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def u(m_, v_, p):
+            upd = -lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay and p is not None:
+                upd = upd - lr_t * weight_decay * p
+            return upd
+
+        if weight_decay and params is not None:
+            updates = jax.tree.map(u, m, v, params)
+        else:
+            updates = jax.tree.map(lambda m_, v_: u(m_, v_, None), m, v)
+        return updates, AdamState(step=step, m=m, v=v)
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)

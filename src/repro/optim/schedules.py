@@ -1,0 +1,31 @@
+"""Learning-rate schedules as step -> lr callables (jit-traceable)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def inverse_time(lr0: float, decay: float = 1e-3):
+    """lr0 / (1 + decay * step) — the classic asynchronous-SGD schedule."""
+    return lambda step: lr0 / (1.0 + decay * step.astype(jnp.float32))
+
+
+def cosine(lr0: float, total_steps: int, warmup: int = 0, floor: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(s / jnp.maximum(warmup, 1), 1.0) if warmup else 1.0
+        prog = jnp.clip((s - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr0, jnp.float32) * warm * cos
+    return fn
+
+
+def linear_warmup(lr0: float, warmup: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return lr0 * jnp.minimum(s / jnp.maximum(warmup, 1), 1.0)
+    return fn

@@ -1,0 +1,3 @@
+from repro.sharding.partition import (  # noqa: F401
+    shardable, logical_to_physical, make_param_shardings, constrain,
+)

@@ -1,0 +1,70 @@
+"""Integration guard for the dry-run machinery: compiles one real config on
+the 256-chip production mesh in a subprocess (512 forced host devices) and
+checks the record's invariants — so regressions in sharding rules, the HLO
+parser or the roofline derivation fail CI, not the next full sweep."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_CHILD = r"""
+import json
+from repro.launch.dryrun import dryrun_one
+rec = dryrun_one("smollm-135m", "train_4k", multi_pod=False)
+print("DRYRUN_OK " + json.dumps(rec))
+"""
+
+
+@pytest.fixture(scope="module")
+def record():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _CHILD],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("DRYRUN_OK")][0]
+    return json.loads(line[len("DRYRUN_OK "):])
+
+
+def test_compiles_on_production_mesh(record):
+    assert record["status"] == "ok"
+    assert record["n_chips"] == 256
+    assert record["mesh"] == {"data": 16, "model": 16}
+
+
+def test_fits_hbm(record):
+    assert record["memory"]["temp_size"] < 16 * 2**30
+    assert record["memory"]["argument_size"] < 16 * 2**30
+
+
+def test_loop_corrected_flops_sane(record):
+    """HLO dot FLOPs must cover at least fwd+bwd model FLOPs (6ND) and stay
+    within an order of magnitude of it (attention + remat overhead)."""
+    model_flops_per_chip = 6 * 110e6 * 256 * 4096 / 256  # non-embed params
+    hlo = record["flops_per_chip"]
+    assert hlo > 0.8 * model_flops_per_chip, (hlo, model_flops_per_chip)
+    assert hlo < 100 * model_flops_per_chip
+
+
+def test_collectives_present_and_loop_multiplied(record):
+    c = record["collectives"]
+    assert c["total_bytes"] > 0
+    # FSDP all-gathers fire once per layer per pass: far more than a handful
+    assert sum(c["counts"].values()) > 50
+
+
+def test_roofline_terms_consistent(record):
+    t = record["roofline"]
+    assert t["compute_s"] == pytest.approx(
+        record["flops_per_chip"] / 197e12, rel=1e-6)
+    assert t["memory_s"] == pytest.approx(
+        record["hbm_bytes_per_chip"] / 819e9, rel=1e-6)
+    assert t["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dml
+from repro.optim import adam, adamw, sgd, momentum, clip_by_global_norm, apply_updates
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arrays(draw, B, d, k, seed):
+    rng = np.random.RandomState(seed)
+    L = jnp.asarray(0.3 * rng.randn(k, d), jnp.float32)
+    xs = jnp.asarray(rng.randn(B, d), jnp.float32)
+    ys = jnp.asarray(rng.randn(B, d), jnp.float32)
+    sim = jnp.asarray((rng.rand(B) < 0.5).astype(np.int32))
+    return L, xs, ys, sim
+
+
+class TestDMLInvariants:
+    @given(st.integers(2, 32), st.integers(2, 16), st.integers(2, 12),
+           st.integers(0, 10**6))
+    @settings(**SETTINGS)
+    def test_distances_nonnegative_and_psd(self, B, d, k, seed):
+        k = min(k, d)
+        L, xs, ys, _ = _arrays(None, B, d, k, seed)
+        d2 = dml.mahalanobis_sqdist(L, xs, ys)
+        assert (np.asarray(d2) >= -1e-5).all()
+        # M = L^T L is PSD regardless of L — the factorization's point
+        w = np.linalg.eigvalsh(np.asarray(dml.M_from_L(L)))
+        assert (w >= -1e-4 * max(1.0, abs(w).max())).all()
+
+    @given(st.integers(2, 32), st.integers(2, 16), st.integers(2, 12),
+           st.integers(0, 10**6))
+    @settings(**SETTINGS)
+    def test_identity_of_indiscernibles(self, B, d, k, seed):
+        k = min(k, d)
+        L, xs, _, _ = _arrays(None, B, d, k, seed)
+        d2 = dml.mahalanobis_sqdist(L, xs, xs)
+        np.testing.assert_allclose(np.asarray(d2), 0.0, atol=1e-5)
+
+    @given(st.integers(2, 32), st.integers(2, 16), st.integers(2, 12),
+           st.integers(0, 10**6))
+    @settings(**SETTINGS)
+    def test_symmetry(self, B, d, k, seed):
+        k = min(k, d)
+        L, xs, ys, _ = _arrays(None, B, d, k, seed)
+        np.testing.assert_allclose(
+            np.asarray(dml.mahalanobis_sqdist(L, xs, ys)),
+            np.asarray(dml.mahalanobis_sqdist(L, ys, xs)), rtol=1e-5,
+            atol=1e-6)
+
+    @given(st.integers(2, 32), st.integers(2, 16), st.integers(2, 12),
+           st.integers(0, 10**6), st.floats(0.1, 5.0))
+    @settings(**SETTINGS)
+    def test_loss_nonnegative_and_lambda_monotone(self, B, d, k, seed, lam):
+        k = min(k, d)
+        L, xs, ys, sim = _arrays(None, B, d, k, seed)
+        l1 = dml.pair_losses(L, xs, ys, sim, lam=lam)
+        l2 = dml.pair_losses(L, xs, ys, sim, lam=lam * 2)
+        assert (np.asarray(l1) >= 0).all()
+        assert (np.asarray(l2) >= np.asarray(l1) - 1e-6).all()
+
+    @given(st.integers(2, 24), st.integers(2, 12), st.integers(2, 10),
+           st.integers(0, 10**6))
+    @settings(**SETTINGS)
+    def test_analytic_grad_equals_autodiff(self, B, d, k, seed):
+        k = min(k, d)
+        L, xs, ys, sim = _arrays(None, B, d, k, seed)
+        g1 = jax.grad(dml.objective)(L, xs, ys, sim, 1.0, 1.0)
+        g2 = dml.analytic_grad(L, xs, ys, sim, 1.0, 1.0)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-3, atol=1e-5)
+
+    @given(st.integers(0, 10**6))
+    @settings(**SETTINGS)
+    def test_ap_bounds(self, seed):
+        rng = np.random.RandomState(seed)
+        n = rng.randint(4, 200)
+        scores = jnp.asarray(rng.randn(n).astype(np.float32))
+        labels = jnp.asarray((rng.rand(n) < 0.5).astype(np.int32))
+        if int(labels.sum()) == 0:
+            return
+        ap = float(dml.average_precision(scores, labels))
+        assert 0.0 <= ap <= 1.0 + 1e-6
+
+
+class TestOptimizerInvariants:
+    @given(st.sampled_from(["sgd", "momentum", "adam", "adamw"]),
+           st.integers(0, 10**6))
+    @settings(**SETTINGS)
+    def test_descends_quadratic(self, name, seed):
+        rng = np.random.RandomState(seed)
+        target = jnp.asarray(rng.randn(8).astype(np.float32))
+        opt = {"sgd": sgd(0.1), "momentum": momentum(0.05),
+               "adam": adam(0.1), "adamw": adamw(0.1, weight_decay=0.0)}[name]
+        x = jnp.zeros(8)
+        state = opt.init(x)
+        loss = lambda p: jnp.sum(jnp.square(p - target))
+        l0 = float(loss(x))
+        for _ in range(60):
+            g = jax.grad(loss)(x)
+            upd, state = opt.update(g, state, x)
+            x = apply_updates(x, upd)
+        assert float(loss(x)) < 0.2 * l0
+
+    @given(st.floats(0.1, 10.0), st.integers(0, 10**6))
+    @settings(**SETTINGS)
+    def test_clip_norm_bound(self, max_norm, seed):
+        rng = np.random.RandomState(seed)
+        g = {"a": jnp.asarray(rng.randn(5, 3).astype(np.float32)),
+             "b": jnp.asarray(rng.randn(7).astype(np.float32))}
+        clipped, gn = clip_by_global_norm(g, max_norm)
+        cn = float(jnp.sqrt(sum(jnp.sum(jnp.square(x))
+                                for x in jax.tree.leaves(clipped))))
+        assert cn <= max_norm * (1 + 1e-4)
+
+
+class TestCheckpointRoundtrip:
+    @given(st.integers(0, 10**6))
+    @settings(max_examples=10, deadline=None)
+    def test_roundtrip(self, seed):
+        import tempfile
+        from repro.checkpoint import save_checkpoint, restore_checkpoint
+        rng = np.random.RandomState(seed)
+        tree = {
+            "a": jnp.asarray(rng.randn(4, 3).astype(np.float32)),
+            "nested": {"b": jnp.asarray(rng.randint(0, 10, 5)),
+                       "c": jnp.asarray(rng.randn(2, 2, 2).astype(np.float32))},
+        }
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, step=3, tree=tree)
+            restored, step = restore_checkpoint(d, tree)
+            assert step == 3
+            for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,92 @@
+"""PS distribution-layer tests.
+
+Multi-device SPMD semantics (BSP identical copies, local-SGD drift/merge,
+SSP convergence) run in a subprocess with 8 forced host devices so the main
+pytest process keeps the real single-device view (dry-run rule).
+The threaded asynchronous simulator (paper §4.2) is tested in-process.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dml
+from repro.core.ps import simulator
+from repro.data import pairs as pairdata
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class TestSPMDSync:
+    @pytest.fixture(scope="class")
+    def subprocess_result(self):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src")
+        env.pop("XLA_FLAGS", None)
+        proc = subprocess.run(
+            [sys.executable, os.path.join(REPO, "tests", "_ps_subprocess_check.py")],
+            capture_output=True, text=True, env=env, timeout=600)
+        assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+        line = [l for l in proc.stdout.splitlines() if l.startswith("PS_CHECK_OK")][0]
+        return json.loads(line[len("PS_CHECK_OK "):])
+
+    def test_bsp_converges_and_copies_identical(self, subprocess_result):
+        r = subprocess_result
+        assert r["bsp_identical"]
+        assert r["bsp_loss_last"] < 0.2 * r["bsp_loss_first"]
+
+    def test_local_sgd_drifts_and_merges(self, subprocess_result):
+        assert subprocess_result["local_drift_and_merge"]
+
+    def test_all_modes_beat_euclidean_ap(self, subprocess_result):
+        r = subprocess_result
+        for k in ("ap_bsp", "ap_local", "ap_ssp"):
+            assert r[k] > r["ap_euclidean"]
+
+
+class TestAsyncSimulator:
+    """The paper's actual async PS (threads + queues), at toy scale."""
+
+    @pytest.fixture(scope="class")
+    def setup(self):
+        cfg = pairdata.PairDatasetConfig(
+            n_samples=400, feat_dim=24, n_classes=4, noise=1.0, seed=0)
+        train_pairs, eval_pairs = pairdata.train_eval_split(
+            cfg, 1500, 1500, 400, 400)
+        dcfg = dml.DMLConfig(feat_dim=24, proj_dim=12)
+        L0 = np.asarray(dml.init_params(dcfg, jax.random.PRNGKey(0)))
+        return train_pairs, eval_pairs, L0
+
+    def test_async_ps_converges(self, setup):
+        train_pairs, eval_pairs, L0 = setup
+        cfg = simulator.AsyncPSConfig(n_workers=3, lr=5e-2, batch_size=128,
+                                      steps_per_worker=80)
+        L, trace = simulator.run_async_dml(cfg, train_pairs, L0)
+        assert len(trace) == 3 * 80
+        # early-vs-late minibatch loss drops
+        early = np.mean([t[2] for t in trace[:30]])
+        late = np.mean([t[2] for t in trace[-30:]])
+        assert late < 0.5 * early
+        # learned metric beats Euclidean on held-out AP
+        xs = jnp.asarray(eval_pairs["xs"]); ys = jnp.asarray(eval_pairs["ys"])
+        lab = jnp.asarray(eval_pairs["sim"])
+        ap = float(dml.average_precision(
+            dml.pair_scores(jnp.asarray(L), xs, ys), lab))
+        ap_e = float(dml.average_precision(
+            dml.pair_scores_euclidean(xs, ys), lab))
+        assert ap > ap_e
+
+    def test_all_workers_contribute(self, setup):
+        train_pairs, _, L0 = setup
+        cfg = simulator.AsyncPSConfig(n_workers=4, lr=2e-2, batch_size=64,
+                                      steps_per_worker=20)
+        _, trace = simulator.run_async_dml(cfg, train_pairs, L0)
+        workers_seen = {t[1] for t in trace}
+        assert workers_seen == {0, 1, 2, 3}
