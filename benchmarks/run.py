@@ -7,6 +7,7 @@ after each section's own output.
   fig3    -> speedup factors (paper Fig. 3)
   fig4    -> metric quality: ours vs Xing2002/ITML/KISS/Euclidean (Fig. 4)
   roofline-> per (arch x shape x mesh) roofline terms from the dry-run
+  retrieval_qps -> serving: fused metric top-k vs per-pair XLA reference
 """
 
 from __future__ import annotations
@@ -31,9 +32,11 @@ def main() -> None:
                             time.time() - t0))
 
     from benchmarks import (ablation_sync, fig2_convergence, fig3_speedup,
-                            fig4_quality, roofline, table1_datasets)
+                            fig4_quality, retrieval_qps, roofline,
+                            table1_datasets)
 
     section("table1_datasets", table1_datasets.main)
+    section("retrieval_qps", retrieval_qps.main)
     section("fig4_quality", fig4_quality.main)
     section("fig2_convergence", fig2_convergence.main)
     section("fig3_speedup", fig3_speedup.main)

@@ -1,0 +1,65 @@
+"""Retrieval quickstart: train a metric, index a gallery, query neighbors.
+
+Run:  PYTHONPATH=src python examples/retrieval_quickstart.py
+
+The end product of DML training is only realized at query time: nearest
+neighbors under M = L^T L. This example learns L on pair constraints
+(paper Eq. 4), pre-projects a gallery once (GalleryIndex), and shows that
+top-k neighbors under the learned metric are far more class-pure than
+Euclidean neighbors on the same data.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dml
+from repro.core.ps.trainer import train_dml_single
+from repro.data import pairs as pairdata
+from repro.serve import GalleryIndex, RetrievalEngine
+
+
+def purity(labels, query_labels, neighbor_ids):
+    """Mean fraction of retrieved neighbors sharing the query's class."""
+    return float(np.mean(labels[neighbor_ids] == query_labels[:, None]))
+
+
+def main():
+    # class signal in a small subspace, Euclidean-dominating noise elsewhere
+    cfg = pairdata.PairDatasetConfig(
+        n_samples=4000, feat_dim=64, n_classes=8, kind="noisy_subspace",
+        noise=0.5, seed=0)
+    feats, labels = pairdata.make_features(cfg)
+    train_pairs, _ = pairdata.train_eval_split(
+        cfg, n_train_sim=4000, n_train_dis=4000,
+        n_eval_sim=500, n_eval_dis=500)
+
+    dml_cfg = dml.DMLConfig(feat_dim=64, proj_dim=32)
+    L, history = train_dml_single(dml_cfg, train_pairs, steps=300,
+                                  batch_size=512, lr=2e-2, seed=0)
+    print(f"objective: {history[0]['loss']:.3f} -> {history[-1]['loss']:.3f}")
+
+    # gallery = first 3500 points; queries = the held-out tail
+    gallery, g_labels = feats[:3500], labels[:3500]
+    queries, q_labels = feats[3500:], labels[3500:]
+
+    # amortize the metric once, then serve
+    index = GalleryIndex.build(L, jnp.asarray(gallery))
+    engine = RetrievalEngine(index, k_top=10)
+    _, nbrs = engine.search(queries)
+    p_learned = purity(g_labels, q_labels, nbrs)
+
+    # Euclidean baseline = identity metric over the same gallery
+    eye = jnp.eye(64, dtype=jnp.float32)
+    _, nbrs_e = RetrievalEngine(GalleryIndex.build(eye, jnp.asarray(gallery)),
+                                k_top=10).search(queries)
+    p_euclid = purity(g_labels, q_labels, nbrs_e)
+
+    print(f"neighbor class purity@10: learned {p_learned:.3f} "
+          f"vs euclidean {p_euclid:.3f} (chance {1 / 8:.3f})")
+    print(f"engine: {engine.stats()}")
+    assert p_learned > p_euclid
+
+
+if __name__ == "__main__":
+    main()

@@ -1,1 +1,3 @@
-from repro.kernels import dml_pair, flash_attention, pairwise_dist  # noqa: F401
+from repro.kernels import (  # noqa: F401
+    dml_pair, flash_attention, metric_topk, pairwise_dist,
+)

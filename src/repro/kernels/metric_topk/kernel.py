@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: fused metric-space top-k retrieval (query side).
+
+The serving hot path: given raw queries ``q`` (Nq, d), the learned metric
+factor ``L`` (k, d), and a gallery that was pre-projected **once** at index
+build time (``gp = G @ L^T`` (M, k), ``gn = ||gp||^2`` (M,)), compute per
+query the k_top nearest gallery rows under the Mahalanobis metric
+``M = L^T L`` — in one pass, without ever materializing the (Nq, M)
+distance matrix in HBM:
+
+    qp       = q @ L^T                       (MXU, once per query tile,
+                                              kept in VMEM scratch)
+    D[:, j]  = ||qp||^2 + gn_j - 2 qp . gp_j (per (bQ, bM) gallery tile)
+    best     = stream-merge(best, D tile)    (running top-k in VMEM)
+
+Grid: (Nq/bQ, M/bM) — gallery innermost, so the projected-query tile and the
+running (bQ, k_top) best-distance/best-index buffers live in VMEM scratch
+across the whole gallery sweep; outputs are written on the last gallery
+step. The merge is k_top rounds of (min, argmin, one-hot mask) over the
+(bQ, k_top + bM) candidate row — pure VPU ops, no sort network — which is
+cheap because k_top << bM.
+
+Tie-breaking matches ``jax.lax.top_k``: equal distances resolve to the
+smaller gallery index (earlier tiles sit first in the candidate row; within
+a tile the index iota ascends; argmin takes the first minimum).
+
+ops.py pads d/k to 128-lane multiples and gallery rows to the tile with
+``gn = +BIG`` sentinels, so padded rows can never enter the top-k.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Sentinel "infinite" distance for padded gallery rows / best-buffer init.
+# Large enough to lose to any real squared distance, small enough that
+# qn + BIG stays finite in float32.
+BIG = 1e30
+
+
+def _merge_topk(bd, bi, d, gidx, k_top: int):
+    """Stream-merge a distance tile into the running top-k.
+
+    bd (bQ, k_top) f32 ascending, bi (bQ, k_top) i32, d (bQ, bM) f32,
+    gidx (bQ, bM) i32 global gallery indices. Returns new (bd, bi).
+    """
+    cd = jnp.concatenate([bd, d], axis=1)               # (bQ, k_top + bM)
+    ci = jnp.concatenate([bi, gidx], axis=1)
+    pos_iota = jax.lax.broadcasted_iota(jnp.int32, cd.shape, 1)
+    new_d, new_i = [], []
+    for _ in range(k_top):
+        m = jnp.min(cd, axis=1)                         # (bQ,)
+        pos = jnp.argmin(cd, axis=1).astype(jnp.int32)  # first min = low idx
+        hit = pos_iota == pos[:, None]                  # (bQ, k_top + bM)
+        new_d.append(m)
+        new_i.append(jnp.sum(jnp.where(hit, ci, 0), axis=1))
+        cd = jnp.where(hit, BIG, cd)                    # knock out the winner
+    return jnp.stack(new_d, axis=1), jnp.stack(new_i, axis=1)
+
+
+def _metric_topk_kernel(q_ref, L_ref, gp_ref, gn_ref,
+                        od_ref, oi_ref,
+                        qp_ref, bd_ref, bi_ref,
+                        *, k_top: int, nm: int, block_m: int):
+    mi = pl.program_id(1)
+
+    @pl.when(mi == 0)
+    def _project_and_reset():
+        # query projection fused into the same pass — computed once per
+        # query tile, reused for every gallery tile from VMEM
+        qp_ref[...] = jax.lax.dot_general(
+            q_ref[...].astype(jnp.float32), L_ref[...].astype(jnp.float32),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+        bd_ref[...] = jnp.full(bd_ref.shape, BIG, jnp.float32)
+        bi_ref[...] = jnp.zeros(bi_ref.shape, jnp.int32)
+
+    qp = qp_ref[...]                                     # (bQ, k)
+    qn = jnp.sum(jnp.square(qp), axis=1)                 # (bQ,)
+    cross = jax.lax.dot_general(
+        qp, gp_ref[...].astype(jnp.float32),
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    d = qn[:, None] + gn_ref[...][None, :] - 2.0 * cross
+    d = jnp.maximum(d, 0.0)                              # (bQ, bM)
+    gidx = (mi * block_m
+            + jax.lax.broadcasted_iota(jnp.int32, d.shape, 1))
+
+    bd, bi = _merge_topk(bd_ref[...], bi_ref[...], d, gidx, k_top)
+    bd_ref[...] = bd
+    bi_ref[...] = bi
+
+    @pl.when(mi == nm - 1)
+    def _epilogue():
+        od_ref[...] = bd_ref[...]
+        oi_ref[...] = bi_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k_top", "block_q", "block_m",
+                                             "interpret"))
+def metric_topk_fused(q, L, gp, gn, *, k_top: int = 10,
+                      block_q: int = 128, block_m: int = 512,
+                      interpret: bool = True):
+    """Fused project + distance + streaming top-k.
+
+    Args:
+      q:  (Nq, d) raw queries.
+      L:  (k, d) metric factor (held whole in VMEM — serving-sized k*d).
+      gp: (M, k) pre-projected gallery rows.
+      gn: (M,) squared norms of gp rows (+BIG for padded rows).
+
+    Shapes must tile evenly (ops.py pads otherwise): Nq % block_q == 0 and
+    M % block_m == 0. Returns (dists (Nq, k_top) f32 ascending,
+    indices (Nq, k_top) int32).
+    """
+    Nq, d = q.shape
+    M, k = gp.shape
+    bQ, bM = min(block_q, Nq), min(block_m, M)
+    assert Nq % bQ == 0 and M % bM == 0, (Nq, M, bQ, bM)
+    assert k_top <= M, (k_top, M)
+    nm = M // bM
+
+    kernel = functools.partial(_metric_topk_kernel, k_top=k_top, nm=nm,
+                               block_m=bM)
+    return pl.pallas_call(
+        kernel,
+        grid=(Nq // bQ, nm),
+        in_specs=[
+            pl.BlockSpec((bQ, d), lambda i, j: (i, 0)),     # q
+            pl.BlockSpec((k, d), lambda i, j: (0, 0)),      # L (whole)
+            pl.BlockSpec((bM, k), lambda i, j: (j, 0)),     # gp
+            pl.BlockSpec((bM,), lambda i, j: (j,)),         # gn
+        ],
+        out_specs=[
+            pl.BlockSpec((bQ, k_top), lambda i, j: (i, 0)),
+            pl.BlockSpec((bQ, k_top), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Nq, k_top), jnp.float32),
+            jax.ShapeDtypeStruct((Nq, k_top), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bQ, k), jnp.float32),       # projected query tile
+            pltpu.VMEM((bQ, k_top), jnp.float32),   # running best distances
+            pltpu.VMEM((bQ, k_top), jnp.int32),     # running best indices
+        ],
+        interpret=interpret,
+    )(q, L, gp, gn)

@@ -1,0 +1,105 @@
+"""Public wrappers for the fused metric top-k kernel: padding + fallback.
+
+The serving contract (serve/index.py builds on this):
+
+  * ``project_gallery``  — the once-per-index amortization: gp = G @ L^T and
+    its row norms. Everything at query time is O(k)-dimensional.
+  * ``metric_topk``      — padded dispatch into the Pallas kernel
+    (kernel.py); ``use_kernel=False`` routes to the factored XLA path
+    instead (there is no automatic shape-based fallback — padding makes
+    every shape kernel-tileable).
+  * ``metric_topk_xla``  — the factored pure-XLA fast path (also the
+    per-shard body inside serve/index.py's shard_map).
+
+Padding rules: feature dim d and projection dim k pad with zeros to
+128-lane multiples (zero columns change no distance); query rows pad to the
+query tile (outputs sliced back); gallery rows pad to the gallery tile with
+``gn = +BIG`` sentinels so they can never enter the top-k.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.metric_topk.kernel import BIG, metric_topk_fused
+from repro.kernels.metric_topk.ref import metric_topk_ref
+
+
+def project_gallery(L, gallery):
+    """Pre-project the gallery once: returns (gp (M,k) f32, gn (M,) f32).
+
+    This is the index-build step that amortizes the learned metric — after
+    it, no query ever touches the d-dimensional space again.
+    """
+    gp = gallery.astype(jnp.float32) @ L.astype(jnp.float32).T
+    gn = jnp.sum(jnp.square(gp), axis=1)
+    return gp, gn
+
+
+@functools.partial(jax.jit, static_argnames=("k_top",))
+def metric_topk_xla(L, queries, gp, gn, k_top: int):
+    """Factored XLA path: project queries, reuse precomputed gallery norms,
+    lax.top_k. Production path on hosts without a Pallas backend."""
+    qp = queries.astype(jnp.float32) @ L.astype(jnp.float32).T
+    return metric_topk_ref(qp, gp, k_top, gn)
+
+
+def _round_up(n: int, mult: int) -> int:
+    return n + (-n) % mult
+
+
+def _pad_axis(x, target: int, axis: int, value=0.0):
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def metric_topk(L, queries, gp, gn=None, *, k_top: int = 10,
+                block_q: int = 128, block_m: int = 512,
+                use_kernel: bool = True, interpret=None):
+    """Top-k gallery neighbors of raw queries under the metric L^T L.
+
+    Args:
+      L: (k, d) metric factor.
+      queries: (Nq, d) raw queries.
+      gp: (M, k) pre-projected gallery (see project_gallery).
+      gn: optional (M,) precomputed gp row norms.
+      interpret: None (default) compiles the kernel on TPU and interprets
+        elsewhere; pass a bool to force.
+
+    Returns (dists (Nq, k_top) f32 ascending, indices (Nq, k_top) int32).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Nq, d = queries.shape
+    M, k = gp.shape
+    if k_top > M:
+        raise ValueError(f"k_top={k_top} > gallery size M={M}")
+    if gn is None:
+        gn = jnp.sum(jnp.square(gp.astype(jnp.float32)), axis=1)
+    if not use_kernel:
+        return metric_topk_xla(L, queries, gp, gn, k_top)
+
+    # lane-align the contracted dims (zero pads are distance-neutral)
+    dP, kP = _round_up(d, 128), _round_up(k, 128)
+    qpad = _pad_axis(queries.astype(jnp.float32), dP, 1)
+    Lpad = _pad_axis(_pad_axis(L.astype(jnp.float32), dP, 1), kP, 0)
+    gpad = _pad_axis(gp.astype(jnp.float32), kP, 1)
+
+    # row tiles: queries sliced back after, gallery padded with BIG norms
+    bQ = block_q if Nq >= block_q else _round_up(Nq, 8)
+    bM = block_m if M >= block_m else _round_up(M, 128)
+    qpad = _pad_axis(qpad, _round_up(Nq, bQ), 0)
+    gpad = _pad_axis(gpad, _round_up(M, bM), 0)
+    gnpad = _pad_axis(gn.astype(jnp.float32), _round_up(M, bM), 0, value=BIG)
+
+    dists, idxs = metric_topk_fused(qpad, Lpad, gpad, gnpad, k_top=k_top,
+                                    block_q=bQ, block_m=bM,
+                                    interpret=interpret)
+    return dists[:Nq], idxs[:Nq]

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the fused metric top-k retrieval kernel.
+
+Two references at different altitudes:
+
+  * ``metric_topk_ref``   — factored-form distances on *projected* points +
+    ``jax.lax.top_k``. Tight oracle for kernel.py (same math, same
+    tie-breaking: smaller gallery index wins on equal distance).
+  * ``metric_topk_naive`` — the textbook per-pair Mahalanobis retrieval
+    baseline: apply ``L`` to every (query - gallery) difference. O(Nq*M*d*k)
+    FLOPs vs the index's O((Nq+M)*d*k + Nq*M*k) — this is the cost the
+    pre-projected gallery amortizes away (Qian et al. 2015's motivation for
+    low-rank L), and the "pure-XLA reference" benchmarks/retrieval_qps.py
+    measures against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise_dist.ref import pairwise_sqdist_ref
+
+
+def metric_sqdist_factored(qp, gp, gn=None):
+    """Squared distances between projected queries (Nq,k) and projected
+    gallery (M,k): D[i,j] = ||qp_i||^2 + ||gp_j||^2 - 2 qp_i . gp_j >= 0.
+    One shared oracle with the pairwise_dist kernel (gn = amortized
+    gallery norms)."""
+    return pairwise_sqdist_ref(qp, gp, gn)
+
+
+def metric_topk_ref(qp, gp, k_top: int, gn=None):
+    """Top-k nearest gallery rows per projected query.
+
+    Returns (dists (Nq, k_top) f32 ascending, indices (Nq, k_top) int32).
+    Ties broken toward the smaller gallery index (lax.top_k semantics).
+    """
+    d = metric_sqdist_factored(qp, gp, gn)
+    neg, idx = jax.lax.top_k(-d, k_top)
+    return -neg, idx.astype(jnp.int32)
+
+
+def metric_topk_naive(L, queries, gallery, k_top: int, chunk: int = 4):
+    """Unamortized baseline: project each (query - gallery point) difference
+    through L, per pair, chunked over queries to bound the (c, M, d) diff
+    tensor. Semantically identical to metric_topk_ref on projected inputs."""
+    L = L.astype(jnp.float32)
+    queries = queries.astype(jnp.float32)
+    gallery = gallery.astype(jnp.float32)
+    dists, idxs = [], []
+    for s in range(0, queries.shape[0], chunk):
+        q = queries[s:s + chunk]                     # (c, d)
+        z = q[:, None, :] - gallery[None, :, :]      # (c, M, d)
+        proj = jnp.einsum("cmd,kd->cmk", z, L)       # per-pair metric apply
+        d = jnp.sum(jnp.square(proj), axis=-1)       # (c, M)
+        neg, idx = jax.lax.top_k(-d, k_top)
+        dists.append(-neg)
+        idxs.append(idx.astype(jnp.int32))
+    return jnp.concatenate(dists, axis=0), jnp.concatenate(idxs, axis=0)

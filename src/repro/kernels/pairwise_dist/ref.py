@@ -5,12 +5,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def pairwise_sqdist_ref(xp, yp):
+def pairwise_sqdist_ref(xp, yp, yn=None):
     """xp (N,k), yp (M,k) projected points (L @ x). Returns (N,M) f32:
-    D[i,j] = ||xp_i - yp_j||^2."""
+    D[i,j] = ||xp_i - yp_j||^2. ``yn`` optionally supplies precomputed
+    ||yp||^2 row norms (the retrieval index amortizes them)."""
     xp = xp.astype(jnp.float32)
     yp = yp.astype(jnp.float32)
     xn = jnp.sum(jnp.square(xp), axis=1)
-    yn = jnp.sum(jnp.square(yp), axis=1)
+    if yn is None:
+        yn = jnp.sum(jnp.square(yp), axis=1)
     cross = xp @ yp.T
     return jnp.maximum(xn[:, None] + yn[None, :] - 2.0 * cross, 0.0)

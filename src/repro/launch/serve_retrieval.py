@@ -1,0 +1,118 @@
+"""Metric-retrieval serving launcher.
+
+Run:  PYTHONPATH=src python -m repro.launch.serve_retrieval \
+          [--gallery-size 20000] [--train-steps 200] [--requests 500]
+
+Builds a class-structured gallery (data.pairs), optionally trains the
+metric L on pair constraints, stands up the serving stack
+(GalleryIndex -> RetrievalEngine -> MicroBatcher), fires single-query
+traffic through the batcher, and reports QPS + latency percentiles +
+neighbor class purity (fraction of returned neighbors sharing the query's
+class — the quality the learned metric buys at serve time).
+
+With --data > 1 the gallery shards over a forced-host-device mesh
+(dry-run style) to exercise the sharded query path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--gallery-size", type=int, default=20000)
+    ap.add_argument("--feat-dim", type=int, default=64)
+    ap.add_argument("--proj-dim", type=int, default=32)
+    ap.add_argument("--n-classes", type=int, default=16)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--train-steps", type=int, default=200,
+                    help="0 = random L (no learned metric)")
+    ap.add_argument("--requests", type=int, default=500)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--max-wait-ms", type=float, default=2.0)
+    ap.add_argument("--backend", choices=["xla", "pallas"], default="xla")
+    ap.add_argument("--data", type=int, default=1,
+                    help=">1 forces that many host devices and shards "
+                         "the gallery over the data axis")
+    args = ap.parse_args()
+
+    if args.data > 1:   # must precede first jax import
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.data} "
+            + os.environ.get("XLA_FLAGS", ""))
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import dml
+    from repro.core.ps.trainer import train_dml_single
+    from repro.data import pairs as pairdata
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve import GalleryIndex, MicroBatcher, RetrievalEngine
+
+    # --- data + metric ---------------------------------------------------
+    cfg = pairdata.PairDatasetConfig(
+        n_samples=args.gallery_size, feat_dim=args.feat_dim,
+        n_classes=args.n_classes, kind="noisy_subspace", noise=0.5, seed=0)
+    feats, labels = pairdata.make_features(cfg)
+    dcfg = dml.DMLConfig(feat_dim=args.feat_dim, proj_dim=args.proj_dim)
+    if args.train_steps > 0:
+        train_pairs, _ = pairdata.train_eval_split(
+            cfg, n_train_sim=4000, n_train_dis=4000,
+            n_eval_sim=100, n_eval_dis=100)
+        L, hist = train_dml_single(dcfg, train_pairs, steps=args.train_steps,
+                                   batch_size=512, lr=2e-2, seed=0)
+        print(f"trained L: objective {hist[0]['loss']:.3f} -> "
+              f"{hist[-1]['loss']:.3f}")
+    else:
+        L = dml.init_params(dcfg, jax.random.PRNGKey(0))
+
+    # --- serving stack ---------------------------------------------------
+    mesh = make_local_mesh(data=args.data) if args.data > 1 else None
+    t0 = time.perf_counter()
+    index = GalleryIndex.build(L, jnp.asarray(feats), mesh=mesh)
+    build_s = time.perf_counter() - t0
+    engine = RetrievalEngine(index, k_top=args.k, backend=args.backend)
+    engine.warmup()
+    print(f"index: {index.size} x {args.proj_dim} "
+          f"({index.n_shards} shard(s)), built+projected in {build_s:.2f}s")
+
+    batcher = MicroBatcher(engine, max_batch=args.max_batch,
+                           max_wait_ms=args.max_wait_ms)
+
+    # --- traffic ---------------------------------------------------------
+    rng = np.random.RandomState(1)
+    qids = rng.randint(0, len(feats), args.requests)
+    noisy = feats[qids] + 0.1 * rng.randn(args.requests, args.feat_dim) \
+        .astype(np.float32)
+    t0 = time.perf_counter()
+    pending = [(qid, time.perf_counter(), batcher.submit(noisy[i]))
+               for i, qid in enumerate(qids)]
+    lat, purity = [], []
+    for qid, t_sub, fut in pending:
+        _, nbr = fut.result(timeout=60)
+        lat.append(time.perf_counter() - t_sub)
+        purity.append(float(np.mean(labels[nbr] == labels[qid])))
+    wall = time.perf_counter() - t0
+    batcher.close()
+
+    lat_ms = np.sort(np.asarray(lat)) * 1e3
+    st = engine.stats()
+    print(f"requests={args.requests} wall={wall:.2f}s "
+          f"qps={args.requests / wall:.0f} "
+          f"(device-side qps={st['qps']:.0f})")
+    print(f"latency ms: p50={lat_ms[len(lat_ms) // 2]:.2f} "
+          f"p99={lat_ms[int(len(lat_ms) * 0.99) - 1]:.2f} "
+          f"max={lat_ms[-1]:.2f}")
+    print(f"batches={batcher.n_batches} "
+          f"mean batch={np.mean(batcher.batch_sizes):.1f}")
+    print(f"neighbor class purity@{args.k}: {np.mean(purity):.3f} "
+          f"(chance {1.0 / args.n_classes:.3f})")
+
+
+if __name__ == "__main__":
+    main()

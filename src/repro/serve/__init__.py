@@ -1,0 +1,11 @@
+"""Metric-space retrieval serving: index -> engine -> micro-batcher.
+
+Query-side subsystem for the learned metric M = L^T L: a pre-projected,
+mesh-sharded gallery index (index.py), a bucketed jitted execution engine
+(engine.py), and a request-coalescing front door (batcher.py). The fused
+device path is kernels/metric_topk.
+"""
+
+from repro.serve.batcher import MicroBatcher  # noqa: F401
+from repro.serve.engine import RetrievalEngine  # noqa: F401
+from repro.serve.index import GalleryIndex  # noqa: F401

@@ -1,0 +1,117 @@
+"""Request micro-batcher: coalesce single-query requests into engine batches.
+
+The serving front door. Callers submit one query vector at a time and get a
+``concurrent.futures.Future`` back; a background thread drains the queue,
+stacks up to ``max_batch`` queries (waiting at most ``max_wait_ms`` past
+the first request so a lone query is never stranded), runs one engine
+search, and distributes per-row results to the waiting futures.
+
+Batching here is what turns the engine's bucketed jit batches into high
+device utilization under many concurrent low-latency clients — the same
+shape as the async parameter-server's request queue on the training side.
+"""
+
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.engine import RetrievalEngine
+
+
+class MicroBatcher:
+    def __init__(self, engine: RetrievalEngine, max_batch: int = 64,
+                 max_wait_ms: float = 2.0):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self._queue: "queue.Queue" = queue.Queue()
+        self._closed = False
+        # orders every submit put before close()'s sentinel put, so no
+        # request can land in the queue after the worker's exit signal
+        self._lock = threading.Lock()
+        self.n_batches = 0
+        # bounded: a long-lived server would otherwise grow this forever
+        self.batch_sizes: collections.deque = collections.deque(maxlen=4096)
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def submit(self, query, k_top: Optional[int] = None) -> Future:
+        """Enqueue one (d,) query. Future resolves to (dists, indices),
+        each (k_top,). k_top defaults to the engine's and must not exceed
+        it (results are sliced from one shared engine batch)."""
+        k = k_top or self.engine.k_top
+        if k > self.engine.k_top:
+            raise ValueError(f"k_top={k} > engine k_top={self.engine.k_top}")
+        q = np.asarray(query, np.float32)
+        d = self.engine.index.L.shape[1]
+        if q.shape != (d,):     # reject here, not in the shared worker
+            raise ValueError(f"query shape {q.shape} != ({d},)")
+        fut: Future = Future()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            self._queue.put((q, k, fut))
+        return fut
+
+    def close(self, timeout: float = 10.0):
+        """Drain outstanding requests and stop the worker thread."""
+        with self._lock:
+            self._closed = True
+            self._queue.put(None)           # wake the worker
+        self._thread.join(timeout=timeout)
+
+    # -- worker ------------------------------------------------------------
+
+    def _collect(self):
+        """Block for the first request, then gather more until the batch is
+        full or the first request has waited max_wait_s."""
+        first = self._queue.get()
+        if first is None:
+            return None
+        batch = [first]
+        deadline = time.perf_counter() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                item = self._queue.get(timeout=remaining)
+            except queue.Empty:
+                break
+            if item is None:
+                break
+            batch.append(item)
+        return batch
+
+    def _loop(self):
+        while True:
+            batch = self._collect()
+            if batch:
+                self._run_batch(batch)
+            if self._closed and self._queue.empty():
+                return
+
+    def _run_batch(self, batch):
+        # set_running_or_notify_cancel guards every resolution: a rider the
+        # client cancelled while pending is skipped (resolving it would
+        # raise InvalidStateError and kill the worker thread)
+        try:
+            qs = np.stack([q for q, _, _ in batch])
+            dists, idxs = self.engine.search(qs)
+        except Exception as e:          # fail every rider, keep serving
+            for _, _, fut in batch:
+                if fut.set_running_or_notify_cancel():
+                    fut.set_exception(e)
+            return
+        self.n_batches += 1
+        self.batch_sizes.append(len(batch))
+        for row, (_, k, fut) in enumerate(batch):
+            if fut.set_running_or_notify_cancel():
+                fut.set_result((dists[row, :k], idxs[row, :k]))

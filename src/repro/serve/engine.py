@@ -1,0 +1,90 @@
+"""Retrieval engine: bucketed, jitted query execution over a GalleryIndex.
+
+The engine owns the serving concerns the index should not know about:
+
+  * **batch bucketing** — incoming batches pad up to a small set of
+    power-of-two bucket sizes so jit compiles once per bucket instead of
+    once per distinct batch size (pad queries are sliced off the result);
+  * **backend choice** — factored XLA path (default, sharded-capable) or
+    the fused Pallas kernel (kernels/metric_topk);
+  * **counters** — requests / queries / wall-clock for QPS reporting.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.index import GalleryIndex
+
+DEFAULT_BUCKETS = (8, 32, 128, 512)
+
+
+class RetrievalEngine:
+    def __init__(self, index: GalleryIndex, k_top: int = 10,
+                 backend: str = "xla",
+                 buckets: Sequence[int] = DEFAULT_BUCKETS):
+        if backend not in ("xla", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.index = index
+        self.k_top = k_top
+        self.backend = backend
+        self.buckets = tuple(sorted(buckets))
+        self.n_requests = 0
+        self.n_queries = 0
+        self.busy_s = 0.0
+
+    def _bucket(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return n    # oversized batch: serve as-is (one extra compile)
+
+    def search(self, queries, k_top: Optional[int] = None):
+        """queries (Nq, d) or a single (d,) vector. Returns
+        (dists (Nq, k_top), indices (Nq, k_top)) as numpy arrays."""
+        k = k_top or self.k_top
+        q = jnp.asarray(queries, jnp.float32)
+        single = q.ndim == 1
+        if single:
+            q = q[None, :]
+        n = q.shape[0]
+        b = self._bucket(n)
+        if b != n:      # pad rows are real compute but sliced from results
+            q = jnp.concatenate([q, jnp.zeros((b - n, q.shape[1]), q.dtype)])
+
+        t0 = time.perf_counter()
+        dists, idxs = self.index.topk(q, k, backend=self.backend)
+        dists, idxs = jax.block_until_ready((dists, idxs))
+        self.busy_s += time.perf_counter() - t0
+        self.n_requests += 1
+        self.n_queries += n
+
+        dists = np.asarray(dists[:n])
+        idxs = np.asarray(idxs[:n])
+        if single:
+            return dists[0], idxs[0]
+        return dists, idxs
+
+    def warmup(self):
+        """Compile every bucket up front so first requests don't pay jit."""
+        d = self.index.L.shape[1]
+        for b in self.buckets:
+            self.index.topk(jnp.zeros((b, d), jnp.float32), self.k_top,
+                            backend=self.backend)
+
+    def stats(self) -> dict:
+        qps = self.n_queries / self.busy_s if self.busy_s > 0 else 0.0
+        return {
+            "n_requests": self.n_requests,
+            "n_queries": self.n_queries,
+            "busy_s": self.busy_s,
+            "qps": qps,
+            "gallery_size": self.index.size,
+            "n_shards": self.index.n_shards,
+            "backend": self.backend,
+        }

@@ -1,0 +1,131 @@
+"""Sharded pre-projected gallery index — the query-side data structure.
+
+Index build amortizes the learned metric once (``gp = G @ L^T`` plus row
+norms; kernels/metric_topk.project_gallery), after which every query costs
+O(d*k + M*k/P) instead of O(M*d*k). Gallery rows shard across the worker
+mesh via the logical ``"gallery"`` axis (sharding/partition.py maps it to
+the (pod, data) axes); the metric factor L is replicated.
+
+Query path on a sharded index: a shard_map computes each shard's local
+top-k over its gallery rows (with indices offset to global row ids), the
+per-shard candidates concatenate along the neighbor axis, and a final
+lax.top_k merges them — exact, because each shard contributes
+min(k_top, local_rows) candidates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.kernels.metric_topk import (metric_sqdist_factored, metric_topk,
+                                       metric_topk_xla, project_gallery)
+from repro.sharding import partition
+
+
+def _gallery_axes(mesh: Mesh, n_rows: int, rules=None) -> Tuple[str, ...]:
+    """Physical mesh axes the gallery rows shard over (possibly empty)."""
+    spec = partition.logical_to_physical(("gallery", None), mesh, rules,
+                                         shape=(n_rows, 1))
+    ax = spec[0]
+    if ax is None:
+        return ()
+    return (ax,) if isinstance(ax, str) else tuple(ax)
+
+
+@dataclasses.dataclass(eq=False)
+class GalleryIndex:
+    """Immutable retrieval index over a pre-projected gallery."""
+
+    L: jax.Array                    # (k, d) replicated metric factor
+    gp: jax.Array                   # (M, k) projected gallery rows
+    gn: jax.Array                   # (M,) row norms of gp
+    mesh: Optional[Mesh] = None
+    axes: Tuple[str, ...] = ()      # mesh axes the rows are sharded over
+    # per-instance k_top -> jitted sharded query fn (an lru_cache here would
+    # pin the whole index in a class-level cache past its lifetime)
+    _sharded_fns: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @classmethod
+    def build(cls, L, gallery, mesh: Optional[Mesh] = None,
+              rules=None) -> "GalleryIndex":
+        """Project the gallery through L once and (optionally) shard it."""
+        gp, gn = project_gallery(L, gallery)
+        axes: Tuple[str, ...] = ()
+        if mesh is not None:
+            axes = _gallery_axes(mesh, gp.shape[0], rules)
+        if axes:
+            row_ax = axes if len(axes) > 1 else axes[0]
+            gp = jax.device_put(gp, NamedSharding(mesh, P(row_ax, None)))
+            gn = jax.device_put(gn, NamedSharding(mesh, P(row_ax)))
+            L = jax.device_put(jnp.asarray(L), NamedSharding(mesh, P()))
+        return cls(L=jnp.asarray(L), gp=gp, gn=gn, mesh=mesh, axes=axes)
+
+    @property
+    def size(self) -> int:
+        return self.gp.shape[0]
+
+    @property
+    def n_shards(self) -> int:
+        if not self.axes:
+            return 1
+        n = 1
+        for a in self.axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def topk(self, queries, k_top: int, backend: str = "xla"):
+        """(dists (Nq, k_top) ascending, global indices (Nq, k_top)).
+
+        backend: "xla" (factored fast path; the only sharded option) or
+        "pallas" (fused kernel, single-device; interpret off-TPU).
+        """
+        if k_top > self.size:
+            raise ValueError(f"k_top={k_top} > gallery size {self.size}")
+        if self.n_shards > 1:
+            if backend != "xla":
+                raise NotImplementedError(
+                    "sharded index only supports the xla backend")
+            return self._topk_sharded(k_top)(queries)
+        if backend == "pallas":
+            return metric_topk(self.L, queries, self.gp, self.gn,
+                               k_top=k_top)
+        return metric_topk_xla(self.L, queries, self.gp, self.gn, k_top)
+
+    def _topk_sharded(self, k_top: int):
+        fn = self._sharded_fns.get(k_top)
+        if fn is None:
+            fn = self._sharded_fns[k_top] = self._build_topk_sharded(k_top)
+        return fn
+
+    def _build_topk_sharded(self, k_top: int):
+        mesh, axes = self.mesh, self.axes
+        rows_local = self.size // self.n_shards
+        kk = min(k_top, rows_local)     # per-shard candidates => exact merge
+        row_ax = axes if len(axes) > 1 else axes[0]
+
+        def local_topk(qp, gp_loc, gn_loc):
+            d = metric_sqdist_factored(qp, gp_loc, gn_loc)
+            neg, idx = jax.lax.top_k(-d, kk)
+            shard = jnp.int32(0)
+            for a in axes:              # spec-major order = global row order
+                shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
+            return -neg, (idx + shard * gp_loc.shape[0]).astype(jnp.int32)
+
+        inner = partition.shard_map(
+            local_topk, mesh=mesh,
+            in_specs=(P(), P(row_ax, None), P(row_ax)),
+            out_specs=(P(None, row_ax), P(None, row_ax)))
+
+        @jax.jit
+        def run(queries):
+            qp = queries.astype(jnp.float32) @ self.L.astype(jnp.float32).T
+            cand_d, cand_i = inner(qp, self.gp, self.gn)   # (Nq, kk*P)
+            neg, pos = jax.lax.top_k(-cand_d, k_top)
+            return -neg, jnp.take_along_axis(cand_i, pos, axis=1)
+
+        return run

@@ -1,0 +1,63 @@
+"""Sharded retrieval checks, run in a subprocess with 8 host devices.
+
+Invoked by tests/test_metric_topk.py. Builds the same gallery index sharded
+over a (data=8, model=1) mesh and unsharded, and asserts the shard_map
+local-topk + global-merge query path agrees exactly with the single-device
+path (indices identical, distances allclose), including when k_top exceeds
+the per-shard row count. Prints a JSON summary on success. Standalone so
+the main pytest process keeps the real single-device view (dry-run rule).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import json  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.launch.mesh import make_local_mesh  # noqa: E402
+from repro.serve import GalleryIndex, RetrievalEngine  # noqa: E402
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+    out = {}
+    rng = np.random.RandomState(0)
+    k, d, M, Nq = 24, 56, 4096, 32
+    L = jnp.asarray(0.3 * rng.randn(k, d), jnp.float32)
+    G = jnp.asarray(rng.randn(M, d), jnp.float32)
+    q = jnp.asarray(rng.randn(Nq, d), jnp.float32)
+
+    mesh = make_local_mesh()                    # (data=8, model=1)
+    sharded = GalleryIndex.build(L, G, mesh=mesh)
+    assert sharded.n_shards == 8, sharded.n_shards
+    single = GalleryIndex.build(L, G)
+
+    for k_top in (1, 10, 600):                  # 600 > M/8: exhausts shards
+        ds, is_ = sharded.topk(q, k_top)
+        du, iu = single.topk(q, k_top)
+        assert (np.asarray(is_) == np.asarray(iu)).all(), \
+            f"k_top={k_top}: sharded indices != single-device"
+        np.testing.assert_allclose(np.asarray(ds), np.asarray(du),
+                                   rtol=1e-5, atol=1e-5)
+    out["sharded_matches_single"] = True
+    out["n_shards"] = sharded.n_shards
+
+    # the engine runs unchanged on a sharded index
+    eng = RetrievalEngine(sharded, k_top=5)
+    dists, idxs = eng.search(q)
+    du, iu = single.topk(q, 5)
+    assert (idxs == np.asarray(iu)).all()
+    assert eng.stats()["n_shards"] == 8
+    out["engine_on_sharded_index"] = True
+
+    print("SERVE_CHECK_OK " + json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,8 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+pytestmark = pytest.mark.slow      # 512-device compile; -m "not slow" skips
+
 _CHILD = r"""
 import json
 from repro.launch.dryrun import dryrun_one

@@ -23,6 +23,8 @@ from repro.data import pairs as pairdata
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+pytestmark = pytest.mark.slow      # subprocess training runs
+
 
 class TestSPMDSync:
     @pytest.fixture(scope="class")

@@ -19,6 +19,8 @@ from repro.models import build_model
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+pytestmark = pytest.mark.slow      # full loops; deselect with -m "not slow"
+
 
 class TestTrainLoopEndToEnd:
     def test_lm_training_learns_structure(self):
