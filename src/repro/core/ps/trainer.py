@@ -50,7 +50,9 @@ def train_dml_distributed(cfg: DMLTrainConfig, pairs: dict,
     """
     opt = opt or sgd(cfg.lr)
     mesh = mesh or sync.make_worker_mesh(cfg.ps.n_workers, cfg.ps.axis)
-    rng = rng if rng is not None else jax.random.PRNGKey(cfg.dml.__hash__() % (2**31))
+    # seed from the config's explicit seed: dataclass __hash__ varies across
+    # Python processes/versions, which silently unseeded distributed runs
+    rng = rng if rng is not None else jax.random.PRNGKey(cfg.ps.seed)
 
     L0 = dml.init_params(cfg.dml, rng)
     state = sync.init_state(opt, L0, cfg.ps)

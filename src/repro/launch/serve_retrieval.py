@@ -5,13 +5,18 @@ Run:  PYTHONPATH=src python -m repro.launch.serve_retrieval \
 
 Builds a class-structured gallery (data.pairs), optionally trains the
 metric L on pair constraints, stands up the serving stack
-(GalleryIndex -> RetrievalEngine -> MicroBatcher), fires single-query
+(index -> RetrievalEngine -> MicroBatcher), fires single-query
 traffic through the batcher, and reports QPS + latency percentiles +
 neighbor class purity (fraction of returned neighbors sharing the query's
 class — the quality the learned metric buys at serve time).
 
+``--index exact`` scans the whole gallery (ExactIndex); ``--index ivf``
+builds the cluster-pruned ANN index (IVFIndex) and scans only the
+``--nprobe`` nearest of ``--n-clusters`` gallery segments per query.
+``--cache-size`` bounds the engine's hot-query LRU (0 disables).
+
 With --data > 1 the gallery shards over a forced-host-device mesh
-(dry-run style) to exercise the sharded query path.
+(dry-run style) to exercise the sharded query path (both index kinds).
 """
 
 from __future__ import annotations
@@ -34,10 +39,21 @@ def main():
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--backend", choices=["xla", "pallas"], default="xla")
+    ap.add_argument("--index", choices=["exact", "ivf"], default="exact")
+    ap.add_argument("--n-clusters", type=int, default=64,
+                    help="ivf: gallery segments (rounds up to a multiple "
+                         "of the shard count)")
+    ap.add_argument("--nprobe", type=int, default=8,
+                    help="ivf: clusters scanned per query")
+    ap.add_argument("--cache-size", type=int, default=1024,
+                    help="engine hot-query LRU entries (0 disables)")
     ap.add_argument("--data", type=int, default=1,
                     help=">1 forces that many host devices and shards "
                          "the gallery over the data axis")
     args = ap.parse_args()
+    if args.index == "ivf" and args.backend == "pallas":
+        ap.error("--index ivf only supports --backend xla (the fused "
+                 "pallas kernel serves the exact full-scan path)")
 
     if args.data > 1:   # must precede first jax import
         os.environ["XLA_FLAGS"] = (
@@ -52,7 +68,8 @@ def main():
     from repro.core.ps.trainer import train_dml_single
     from repro.data import pairs as pairdata
     from repro.launch.mesh import make_local_mesh
-    from repro.serve import GalleryIndex, MicroBatcher, RetrievalEngine
+    from repro.serve import (ExactIndex, IVFIndex, MicroBatcher,
+                             RetrievalEngine)
 
     # --- data + metric ---------------------------------------------------
     cfg = pairdata.PairDatasetConfig(
@@ -74,12 +91,23 @@ def main():
     # --- serving stack ---------------------------------------------------
     mesh = make_local_mesh(data=args.data) if args.data > 1 else None
     t0 = time.perf_counter()
-    index = GalleryIndex.build(L, jnp.asarray(feats), mesh=mesh)
+    if args.index == "ivf":
+        index = IVFIndex.build(L, jnp.asarray(feats), mesh=mesh,
+                               n_clusters=args.n_clusters,
+                               nprobe=args.nprobe)
+    else:
+        index = ExactIndex.build(L, jnp.asarray(feats), mesh=mesh)
     build_s = time.perf_counter() - t0
-    engine = RetrievalEngine(index, k_top=args.k, backend=args.backend)
+    engine = RetrievalEngine(index, k_top=args.k, backend=args.backend,
+                             cache_size=args.cache_size)
     engine.warmup()
-    print(f"index: {index.size} x {args.proj_dim} "
+    print(f"index[{args.index}]: {index.size} x {args.proj_dim} "
           f"({index.n_shards} shard(s)), built+projected in {build_s:.2f}s")
+    if args.index == "ivf":
+        scanned = index.nprobe * index.cap
+        print(f"  ivf: {index.n_clusters} clusters, cap {index.cap}, "
+              f"nprobe {index.nprobe} -> <= {scanned} of {index.size} rows "
+              f"scanned per query ({scanned / index.size:.1%})")
 
     batcher = MicroBatcher(engine, max_batch=args.max_batch,
                            max_wait_ms=args.max_wait_ms)
@@ -110,6 +138,8 @@ def main():
           f"max={lat_ms[-1]:.2f}")
     print(f"batches={batcher.n_batches} "
           f"mean batch={np.mean(batcher.batch_sizes):.1f}")
+    print(f"cache: {st['cache_hits']} hits / {st['cache_misses']} misses "
+          f"({st['cache_entries']} entries)")
     print(f"neighbor class purity@{args.k}: {np.mean(purity):.3f} "
           f"(chance {1.0 / args.n_classes:.3f})")
 

@@ -1,11 +1,16 @@
-"""Metric-space retrieval serving: index -> engine -> micro-batcher.
+"""Metric-space retrieval serving: index hierarchy -> engine -> batcher.
 
-Query-side subsystem for the learned metric M = L^T L: a pre-projected,
-mesh-sharded gallery index (index.py), a bucketed jitted execution engine
-(engine.py), and a request-coalescing front door (batcher.py). The fused
-device path is kernels/metric_topk.
+Query-side subsystem for the learned metric M = L^T L: a pluggable index
+hierarchy (index.py MetricIndex protocol, ExactIndex full scan; ivf.py
+IVFIndex cluster-pruned ANN) over the shared projection/shard/merge
+substrate (scan.py), a bucketed jitted execution engine with a hot-query
+LRU cache (engine.py), and a request-coalescing front door (batcher.py).
+The fused device path is kernels/metric_topk.
 """
 
 from repro.serve.batcher import MicroBatcher  # noqa: F401
 from repro.serve.engine import RetrievalEngine  # noqa: F401
-from repro.serve.index import GalleryIndex  # noqa: F401
+from repro.serve.index import (ExactIndex, GalleryIndex,  # noqa: F401
+                               MetricIndex)
+from repro.serve.ivf import IVFIndex, kmeans_projected  # noqa: F401
+from repro.serve.scan import recall_at_k  # noqa: F401

@@ -1,4 +1,4 @@
-"""Retrieval engine: bucketed, jitted query execution over a GalleryIndex.
+"""Retrieval engine: bucketed, jitted, cached query execution over an index.
 
 The engine owns the serving concerns the index should not know about:
 
@@ -6,12 +6,21 @@ The engine owns the serving concerns the index should not know about:
     power-of-two bucket sizes so jit compiles once per bucket instead of
     once per distinct batch size (pad queries are sliced off the result);
   * **backend choice** — factored XLA path (default, sharded-capable) or
-    the fused Pallas kernel (kernels/metric_topk);
-  * **counters** — requests / queries / wall-clock for QPS reporting.
+    the fused Pallas kernel (kernels/metric_topk; ExactIndex only);
+  * **hot-query cache** — a bounded LRU keyed by (query bytes, k). Repeat
+    queries (think: trending items, retried requests) skip the device
+    entirely when every row of a batch hits. ``index.version`` is the
+    invalidation hook: any bump (gallery mutation, index swap-in) flushes
+    the cache before the next lookup;
+  * **counters** — requests / queries / wall-clock / cache hit-miss for
+    QPS reporting via ``stats()``.
+
+Works against any MetricIndex backend (serve/index.py, serve/ivf.py).
 """
 
 from __future__ import annotations
 
+import collections
 import time
 from typing import Optional, Sequence
 
@@ -19,24 +28,36 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.index import GalleryIndex
+from repro.serve.index import MetricIndex
 
 DEFAULT_BUCKETS = (8, 32, 128, 512)
+DEFAULT_CACHE = 1024
 
 
 class RetrievalEngine:
-    def __init__(self, index: GalleryIndex, k_top: int = 10,
+    def __init__(self, index: MetricIndex, k_top: int = 10,
                  backend: str = "xla",
-                 buckets: Sequence[int] = DEFAULT_BUCKETS):
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 cache_size: int = DEFAULT_CACHE):
         if backend not in ("xla", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         self.index = index
         self.k_top = k_top
         self.backend = backend
         self.buckets = tuple(sorted(buckets))
+        self.cache_size = cache_size
         self.n_requests = 0
         self.n_queries = 0
+        self.n_device_queries = 0
         self.busy_s = 0.0
+        self.cache_hits = 0
+        self.cache_misses = 0
+        # (query f32 bytes, k) -> (dists (k,), idxs (k,)) numpy rows
+        self._cache: "collections.OrderedDict" = collections.OrderedDict()
+        # identity + version: a freshly built replacement index also has
+        # version 0, so version alone cannot detect an index swap-in
+        self._cache_index = index
+        self._cache_version = index.version
 
     def _bucket(self, n: int) -> int:
         for b in self.buckets:
@@ -44,15 +65,75 @@ class RetrievalEngine:
                 return b
         return n    # oversized batch: serve as-is (one extra compile)
 
+    # -- hot-query LRU -------------------------------------------------------
+
+    def _cache_lookup(self, keys):
+        """Per-row lookup, refreshing LRU recency. Hit/miss counters are
+        settled by the caller: hits count only rows actually served from
+        cache (i.e. the whole batch hit and the device was skipped) — a
+        row that was present but recomputed anyway saved nothing."""
+        if (self.index is not self._cache_index
+                or self.index.version != self._cache_version):
+            self.invalidate_cache()                      # invalidation hook
+        rows = []
+        for key in keys:
+            hit = self._cache.get(key)
+            if hit is not None:
+                self._cache.move_to_end(key)
+            rows.append(hit)
+        return rows
+
+    def _cache_store(self, keys, dists, idxs):
+        if self.cache_size <= 0:
+            return
+        for row, key in enumerate(keys):
+            # copies: the returned arrays are the caller's to mutate
+            self._cache[key] = (dists[row].copy(), idxs[row].copy())
+            self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    def invalidate_cache(self):
+        """Manual flush (version bumps and index swaps do this lazily on
+        the next search)."""
+        self._cache.clear()
+        self._cache_index = self.index
+        self._cache_version = self.index.version
+
+    # -- search --------------------------------------------------------------
+
     def search(self, queries, k_top: Optional[int] = None):
         """queries (Nq, d) or a single (d,) vector. Returns
         (dists (Nq, k_top), indices (Nq, k_top)) as numpy arrays."""
         k = k_top or self.k_top
-        q = jnp.asarray(queries, jnp.float32)
+        caching = self.cache_size > 0
+        # keys come from host bytes, so with the cache on, stay in numpy
+        # until the hit check fails — a full hit never touches the device
+        q = (np.asarray(queries, np.float32) if caching
+             else jnp.asarray(queries, jnp.float32))
         single = q.ndim == 1
         if single:
             q = q[None, :]
         n = q.shape[0]
+        self.n_requests += 1
+        self.n_queries += n
+        if n == 0:
+            return (np.zeros((0, k), np.float32),
+                    np.zeros((0, k), np.int32))
+
+        keys = None
+        if caching:                 # disabled cache pays no hashing
+            keys = [(row.tobytes(), k) for row in q]
+            cached = self._cache_lookup(keys)
+            if all(c is not None for c in cached):  # full hit: skip device
+                self.cache_hits += n
+                dists = np.stack([c[0] for c in cached])
+                idxs = np.stack([c[1] for c in cached])
+                return (dists[0], idxs[0]) if single else (dists, idxs)
+            self.cache_misses += n
+            q = jnp.asarray(q)
+
+        self.n_device_queries += n
         b = self._bucket(n)
         if b != n:      # pad rows are real compute but sliced from results
             q = jnp.concatenate([q, jnp.zeros((b - n, q.shape[1]), q.dtype)])
@@ -61,11 +142,11 @@ class RetrievalEngine:
         dists, idxs = self.index.topk(q, k, backend=self.backend)
         dists, idxs = jax.block_until_ready((dists, idxs))
         self.busy_s += time.perf_counter() - t0
-        self.n_requests += 1
-        self.n_queries += n
 
         dists = np.asarray(dists[:n])
         idxs = np.asarray(idxs[:n])
+        if keys is not None:
+            self._cache_store(keys, dists, idxs)
         if single:
             return dists[0], idxs[0]
         return dists, idxs
@@ -78,13 +159,20 @@ class RetrievalEngine:
                             backend=self.backend)
 
     def stats(self) -> dict:
-        qps = self.n_queries / self.busy_s if self.busy_s > 0 else 0.0
+        # device qps over device-served queries only: cache hits add no
+        # busy time and would inflate the ratio under repeat traffic
+        qps = self.n_device_queries / self.busy_s if self.busy_s > 0 else 0.0
         return {
             "n_requests": self.n_requests,
             "n_queries": self.n_queries,
+            "n_device_queries": self.n_device_queries,
             "busy_s": self.busy_s,
             "qps": qps,
             "gallery_size": self.index.size,
             "n_shards": self.index.n_shards,
             "backend": self.backend,
+            "index": type(self.index).__name__,
+            "cache_hits": self.cache_hits,
+            "cache_misses": self.cache_misses,
+            "cache_entries": len(self._cache),
         }

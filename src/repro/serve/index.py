@@ -1,68 +1,87 @@
-"""Sharded pre-projected gallery index — the query-side data structure.
+"""Index hierarchy: the MetricIndex protocol and the exact scan backend.
+
+``MetricIndex`` is the contract the engine (serve/engine.py) programs
+against — build once, answer ``topk`` forever, expose ``size`` /
+``n_shards`` for stats and ``version`` for cache invalidation. Two
+implementations ship:
+
+  * ``ExactIndex`` (this module) — scans every pre-projected gallery row;
+    exact by construction. O(M*k/P) per query.
+  * ``IVFIndex`` (serve/ivf.py) — cluster-pruned approximate scan that
+    visits only the ``nprobe`` nearest gallery segments. Exact when
+    ``nprobe == n_clusters``.
+
+Both compose serve/scan.py for the shared substrate: query projection,
+"gallery"-axis row sharding, and the shard_map local-topk/global-merge
+skeleton that keeps sharded answers identical to single-device ones.
 
 Index build amortizes the learned metric once (``gp = G @ L^T`` plus row
 norms; kernels/metric_topk.project_gallery), after which every query costs
 O(d*k + M*k/P) instead of O(M*d*k). Gallery rows shard across the worker
 mesh via the logical ``"gallery"`` axis (sharding/partition.py maps it to
 the (pod, data) axes); the metric factor L is replicated.
-
-Query path on a sharded index: a shard_map computes each shard's local
-top-k over its gallery rows (with indices offset to global row ids), the
-per-shard candidates concatenate along the neighbor axis, and a final
-lax.top_k merges them — exact, because each shard contributes
-min(k_top, local_rows) candidates.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Protocol, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.kernels.metric_topk import (metric_sqdist_factored, metric_topk,
                                        metric_topk_xla, project_gallery)
-from repro.sharding import partition
+from repro.serve import scan
 
 
-def _gallery_axes(mesh: Mesh, n_rows: int, rules=None) -> Tuple[str, ...]:
-    """Physical mesh axes the gallery rows shard over (possibly empty)."""
-    spec = partition.logical_to_physical(("gallery", None), mesh, rules,
-                                         shape=(n_rows, 1))
-    ax = spec[0]
-    if ax is None:
-        return ()
-    return (ax,) if isinstance(ax, str) else tuple(ax)
+@runtime_checkable
+class MetricIndex(Protocol):
+    """What the serving engine needs from any retrieval index backend.
+
+    Implementations additionally provide a ``build(L, gallery, ...)``
+    classmethod constructor; it is not part of the runtime-checked
+    protocol because its signature is backend-specific.
+    """
+
+    version: int        # bumped on gallery mutation -> engine cache flush
+
+    @property
+    def size(self) -> int: ...          # number of real gallery rows
+
+    @property
+    def n_shards(self) -> int: ...      # mesh shards the rows live on
+
+    def topk(self, queries, k_top: int, backend: str = "xla"):
+        """(dists (Nq, k_top) ascending, global row ids (Nq, k_top))."""
+        ...
 
 
 @dataclasses.dataclass(eq=False)
-class GalleryIndex:
-    """Immutable retrieval index over a pre-projected gallery."""
+class ExactIndex:
+    """Immutable exact retrieval index over a pre-projected gallery."""
 
     L: jax.Array                    # (k, d) replicated metric factor
     gp: jax.Array                   # (M, k) projected gallery rows
     gn: jax.Array                   # (M,) row norms of gp
-    mesh: Optional[Mesh] = None
+    mesh: Optional[jax.sharding.Mesh] = None
     axes: Tuple[str, ...] = ()      # mesh axes the rows are sharded over
+    version: int = 0
     # per-instance k_top -> jitted sharded query fn (an lru_cache here would
     # pin the whole index in a class-level cache past its lifetime)
     _sharded_fns: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @classmethod
-    def build(cls, L, gallery, mesh: Optional[Mesh] = None,
-              rules=None) -> "GalleryIndex":
+    def build(cls, L, gallery, mesh=None, rules=None) -> "ExactIndex":
         """Project the gallery through L once and (optionally) shard it."""
         gp, gn = project_gallery(L, gallery)
         axes: Tuple[str, ...] = ()
         if mesh is not None:
-            axes = _gallery_axes(mesh, gp.shape[0], rules)
+            axes = scan.gallery_axes(mesh, gp.shape[0], rules)
         if axes:
-            row_ax = axes if len(axes) > 1 else axes[0]
-            gp = jax.device_put(gp, NamedSharding(mesh, P(row_ax, None)))
-            gn = jax.device_put(gn, NamedSharding(mesh, P(row_ax)))
-            L = jax.device_put(jnp.asarray(L), NamedSharding(mesh, P()))
+            gp = scan.put_row_sharded(mesh, axes, gp)
+            gn = scan.put_row_sharded(mesh, axes, gn)
+            L = scan.put_replicated(mesh, L)
         return cls(L=jnp.asarray(L), gp=gp, gn=gn, mesh=mesh, axes=axes)
 
     @property
@@ -71,12 +90,7 @@ class GalleryIndex:
 
     @property
     def n_shards(self) -> int:
-        if not self.axes:
-            return 1
-        n = 1
-        for a in self.axes:
-            n *= self.mesh.shape[a]
-        return n
+        return scan.n_shards(self.mesh, self.axes)
 
     def topk(self, queries, k_top: int, backend: str = "xla"):
         """(dists (Nq, k_top) ascending, global indices (Nq, k_top)).
@@ -103,29 +117,28 @@ class GalleryIndex:
         return fn
 
     def _build_topk_sharded(self, k_top: int):
-        mesh, axes = self.mesh, self.axes
         rows_local = self.size // self.n_shards
         kk = min(k_top, rows_local)     # per-shard candidates => exact merge
-        row_ax = axes if len(axes) > 1 else axes[0]
 
-        def local_topk(qp, gp_loc, gn_loc):
+        def local_candidates(shard, qp, extras, locals_):
+            gp_loc, gn_loc = locals_
             d = metric_sqdist_factored(qp, gp_loc, gn_loc)
-            neg, idx = jax.lax.top_k(-d, kk)
-            shard = jnp.int32(0)
-            for a in axes:              # spec-major order = global row order
-                shard = shard * mesh.shape[a] + jax.lax.axis_index(a)
-            return -neg, (idx + shard * gp_loc.shape[0]).astype(jnp.int32)
+            ids = shard * gp_loc.shape[0] + jnp.arange(gp_loc.shape[0],
+                                                       dtype=jnp.int32)
+            # contiguous row scan: candidate position order == global-id
+            # order, so the cheap positional tie-break is already exact
+            return scan.local_topk(d, jnp.broadcast_to(ids, d.shape), kk)
 
-        inner = partition.shard_map(
-            local_topk, mesh=mesh,
-            in_specs=(P(), P(row_ax, None), P(row_ax)),
-            out_specs=(P(None, row_ax), P(None, row_ax)))
+        inner = scan.build_sharded_topk(self.mesh, self.axes,
+                                        (self.gp, self.gn),
+                                        local_candidates, k_top)
 
         @jax.jit
         def run(queries):
-            qp = queries.astype(jnp.float32) @ self.L.astype(jnp.float32).T
-            cand_d, cand_i = inner(qp, self.gp, self.gn)   # (Nq, kk*P)
-            neg, pos = jax.lax.top_k(-cand_d, k_top)
-            return -neg, jnp.take_along_axis(cand_i, pos, axis=1)
+            return inner(scan.project_queries(self.L, queries))
 
         return run
+
+
+# Back-compat: PR 1 shipped the exact backend under this name.
+GalleryIndex = ExactIndex

@@ -21,7 +21,8 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.launch.mesh import make_local_mesh  # noqa: E402
-from repro.serve import GalleryIndex, RetrievalEngine  # noqa: E402
+from repro.serve import (GalleryIndex, IVFIndex,  # noqa: E402
+                         RetrievalEngine)
 
 
 def main():
@@ -55,6 +56,24 @@ def main():
     assert (idxs == np.asarray(iu)).all()
     assert eng.stats()["n_shards"] == 8
     out["engine_on_sharded_index"] = True
+
+    # IVF: whole-cluster sharding must agree with the single-device path,
+    # and full probe must agree with the exact scan
+    ivf_s = IVFIndex.build(L, G, n_clusters=16, nprobe=4, seed=0, mesh=mesh)
+    ivf_1 = IVFIndex.build(L, G, n_clusters=16, nprobe=4, seed=0)
+    assert ivf_s.n_shards == 8, ivf_s.n_shards
+    for k_top, nprobe in ((1, 4), (10, 4), (10, 16)):
+        ds, is_ = ivf_s.topk(q, k_top, nprobe=nprobe)
+        du, iu = ivf_1.topk(q, k_top, nprobe=nprobe)
+        assert (np.asarray(is_) == np.asarray(iu)).all(), \
+            f"k_top={k_top} nprobe={nprobe}: sharded IVF != single-device"
+        np.testing.assert_allclose(np.asarray(ds), np.asarray(du),
+                                   rtol=1e-4, atol=1e-3)
+    _, i_full = ivf_s.topk(q, 10, nprobe=16)
+    _, i_ex = single.topk(q, 10)
+    assert (np.asarray(i_full) == np.asarray(i_ex)).all(), \
+        "sharded IVF full probe != exact scan"
+    out["ivf_sharded_matches_single"] = True
 
     print("SERVE_CHECK_OK " + json.dumps(out))
 

@@ -178,3 +178,6 @@ class TestShardedEngine:
 
     def test_engine_runs_on_sharded_index(self, subprocess_result):
         assert subprocess_result["engine_on_sharded_index"]
+
+    def test_sharded_ivf_matches_single_device(self, subprocess_result):
+        assert subprocess_result["ivf_sharded_matches_single"]
