@@ -9,6 +9,8 @@ after each section's own output.
   roofline-> per (arch x shape x mesh) roofline terms from the dry-run
   retrieval_qps -> serving: fused metric top-k vs per-pair XLA reference
   retrieval_recall -> serving: IVF recall@10-vs-QPS frontier vs exact scan
+  gallery_churn -> serving: QPS + recall@10 under sustained upsert/delete
+             churn with periodic compaction (MutableIndex)
 """
 
 from __future__ import annotations
@@ -33,12 +35,13 @@ def main() -> None:
                             time.time() - t0))
 
     from benchmarks import (ablation_sync, fig2_convergence, fig3_speedup,
-                            fig4_quality, retrieval_qps, retrieval_recall,
-                            roofline, table1_datasets)
+                            fig4_quality, gallery_churn, retrieval_qps,
+                            retrieval_recall, roofline, table1_datasets)
 
     section("table1_datasets", table1_datasets.main)
     section("retrieval_qps", retrieval_qps.main)
     section("retrieval_recall", retrieval_recall.main)
+    section("gallery_churn", gallery_churn.main)
     section("fig4_quality", fig4_quality.main)
     section("fig2_convergence", fig2_convergence.main)
     section("fig3_speedup", fig3_speedup.main)

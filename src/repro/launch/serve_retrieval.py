@@ -15,8 +15,18 @@ builds the cluster-pruned ANN index (IVFIndex) and scans only the
 ``--nprobe`` nearest of ``--n-clusters`` gallery segments per query.
 ``--cache-size`` bounds the engine's hot-query LRU (0 disables).
 
+``--mutable`` wraps the index in a MutableIndex (streaming upserts /
+deletes / compaction / metric hot-swap); ``--churn N`` then exercises N
+upserts + N deletes after the traffic run and reports the lifecycle
+counters. ``--snapshot-dir`` restarts without re-projecting: if the
+directory holds a snapshot it is loaded (the manifest's L fingerprint is
+checked against this run's metric), otherwise the freshly built index is
+saved there. ``--warmup-ks`` pre-compiles extra k values so non-default
+``k_top`` requests don't pay first-request jit.
+
 With --data > 1 the gallery shards over a forced-host-device mesh
-(dry-run style) to exercise the sharded query path (both index kinds).
+(dry-run style) to exercise the sharded query path (both index kinds;
+incompatible with --mutable / --snapshot-dir, which are single-shard).
 """
 
 from __future__ import annotations
@@ -47,6 +57,18 @@ def main():
                     help="ivf: clusters scanned per query")
     ap.add_argument("--cache-size", type=int, default=1024,
                     help="engine hot-query LRU entries (0 disables)")
+    ap.add_argument("--mutable", action="store_true",
+                    help="wrap the index in a MutableIndex (retains raw "
+                         "features for metric hot-swap)")
+    ap.add_argument("--churn", type=int, default=0,
+                    help="with --mutable: upsert+delete this many rows "
+                         "after the traffic run")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="load the index from this snapshot if present, "
+                         "else save the built index there")
+    ap.add_argument("--warmup-ks", default=None,
+                    help="comma-separated extra k values to pre-compile "
+                         "(e.g. 5,20); --k is always included")
     ap.add_argument("--data", type=int, default=1,
                     help=">1 forces that many host devices and shards "
                          "the gallery over the data axis")
@@ -54,6 +76,11 @@ def main():
     if args.index == "ivf" and args.backend == "pallas":
         ap.error("--index ivf only supports --backend xla (the fused "
                  "pallas kernel serves the exact full-scan path)")
+    if args.data > 1 and (args.mutable or args.snapshot_dir):
+        ap.error("--mutable / --snapshot-dir are single-shard "
+                 "(incompatible with --data > 1)")
+    if args.churn and not args.mutable:
+        ap.error("--churn requires --mutable")
 
     if args.data > 1:   # must precede first jax import
         os.environ["XLA_FLAGS"] = (
@@ -69,7 +96,8 @@ def main():
     from repro.data import pairs as pairdata
     from repro.launch.mesh import make_local_mesh
     from repro.serve import (ExactIndex, IVFIndex, MicroBatcher,
-                             RetrievalEngine)
+                             MutableIndex, RetrievalEngine, has_snapshot,
+                             load_index, save_index)
 
     # --- data + metric ---------------------------------------------------
     cfg = pairdata.PairDatasetConfig(
@@ -90,24 +118,42 @@ def main():
 
     # --- serving stack ---------------------------------------------------
     mesh = make_local_mesh(data=args.data) if args.data > 1 else None
+    ivf_kw = dict(n_clusters=args.n_clusters, nprobe=args.nprobe)
     t0 = time.perf_counter()
-    if args.index == "ivf":
-        index = IVFIndex.build(L, jnp.asarray(feats), mesh=mesh,
-                               n_clusters=args.n_clusters,
-                               nprobe=args.nprobe)
+    loaded = bool(args.snapshot_dir) and has_snapshot(args.snapshot_dir)
+    if loaded:
+        index = load_index(args.snapshot_dir, expect_L=L)
+        if args.mutable and not isinstance(index, MutableIndex):
+            ap.error(f"--mutable requested but {args.snapshot_dir} holds "
+                     f"a frozen {type(index).__name__} snapshot; point "
+                     f"--snapshot-dir elsewhere or drop --mutable")
+    elif args.mutable:
+        index = MutableIndex.build(
+            L, feats, base=args.index, retain_raw=True,
+            **(ivf_kw if args.index == "ivf" else {}))
+    elif args.index == "ivf":
+        index = IVFIndex.build(L, jnp.asarray(feats), mesh=mesh, **ivf_kw)
     else:
         index = ExactIndex.build(L, jnp.asarray(feats), mesh=mesh)
     build_s = time.perf_counter() - t0
+    if args.snapshot_dir and not loaded:
+        save_index(index, args.snapshot_dir)
+        print(f"snapshot saved to {args.snapshot_dir}")
     engine = RetrievalEngine(index, k_top=args.k, backend=args.backend,
                              cache_size=args.cache_size)
-    engine.warmup()
-    print(f"index[{args.index}]: {index.size} x {args.proj_dim} "
-          f"({index.n_shards} shard(s)), built+projected in {build_s:.2f}s")
-    if args.index == "ivf":
-        scanned = index.nprobe * index.cap
-        print(f"  ivf: {index.n_clusters} clusters, cap {index.cap}, "
-              f"nprobe {index.nprobe} -> <= {scanned} of {index.size} rows "
-              f"scanned per query ({scanned / index.size:.1%})")
+    warm_ks = [args.k]
+    if args.warmup_ks:
+        warm_ks += [int(x) for x in args.warmup_ks.split(",")]
+    engine.warmup(ks=sorted(set(warm_ks)))
+    verb = "loaded from snapshot" if loaded else "built+projected"
+    print(f"index[{type(index).__name__}]: {index.size} x {args.proj_dim} "
+          f"({index.n_shards} shard(s)), {verb} in {build_s:.2f}s")
+    ivf = index.base if isinstance(index, MutableIndex) else index
+    if isinstance(ivf, IVFIndex):
+        scanned = ivf.nprobe * ivf.cap
+        print(f"  ivf: {ivf.n_clusters} clusters, cap {ivf.cap}, "
+              f"nprobe {ivf.nprobe} -> <= {scanned} of {ivf.size} rows "
+              f"scanned per query ({scanned / max(ivf.size, 1):.1%})")
 
     batcher = MicroBatcher(engine, max_batch=args.max_batch,
                            max_wait_ms=args.max_wait_ms)
@@ -124,7 +170,12 @@ def main():
     for qid, t_sub, fut in pending:
         _, nbr = fut.result(timeout=60)
         lat.append(time.perf_counter() - t_sub)
-        purity.append(float(np.mean(labels[nbr] == labels[qid])))
+        # a loaded post-churn snapshot can serve rows upserted after this
+        # run's synthetic label table was made; score only known ids
+        nbr = np.asarray(nbr)
+        known = nbr[(nbr >= 0) & (nbr < len(labels))]
+        if len(known):
+            purity.append(float(np.mean(labels[known] == labels[qid])))
     wall = time.perf_counter() - t0
     batcher.close()
 
@@ -142,6 +193,27 @@ def main():
           f"({st['cache_entries']} entries)")
     print(f"neighbor class purity@{args.k}: {np.mean(purity):.3f} "
           f"(chance {1.0 / args.n_classes:.3f})")
+
+    # --- mutation lifecycle demo -----------------------------------------
+    if args.mutable and args.churn > 0 and isinstance(index, MutableIndex):
+        n = min(args.churn, index.size // 2)
+        fresh = feats[rng.randint(0, len(feats), n)] \
+            + 0.1 * rng.randn(n, args.feat_dim).astype(np.float32)
+        new_ids = index.upsert(fresh)
+        retire = index.live_ids()[:n]
+        retire = retire[~np.isin(retire, new_ids)]
+        index.delete(retire)
+        d_m, i_m = engine.search(noisy[:8])
+        st = engine.stats()
+        print(f"churn: +{n} upserts / -{len(retire)} deletes -> "
+              f"size {index.size}, delta_rows {st['delta_rows']}, "
+              f"tombstones {st['tombstones']}, "
+              f"compactions {st['compactions']} "
+              f"(version {index.version}); new ids reachable: "
+              f"{bool(np.isin(i_m, new_ids).any())}")
+        if args.snapshot_dir:
+            save_index(index, args.snapshot_dir)
+            print(f"post-churn snapshot saved to {args.snapshot_dir}")
 
 
 if __name__ == "__main__":

@@ -46,7 +46,11 @@ class MicroBatcher:
         """Enqueue one (d,) query. Future resolves to (dists, indices),
         each (k_top,). k_top defaults to the engine's and must not exceed
         it (results are sliced from one shared engine batch)."""
-        k = k_top or self.engine.k_top
+        # `is None`, not truthiness: `k_top or default` silently mapped an
+        # explicit k_top=0 to the default instead of rejecting it
+        k = self.engine.k_top if k_top is None else k_top
+        if k < 1:
+            raise ValueError(f"k_top must be >= 1, got {k}")
         if k > self.engine.k_top:
             raise ValueError(f"k_top={k} > engine k_top={self.engine.k_top}")
         q = np.asarray(query, np.float32)

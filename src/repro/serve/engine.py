@@ -41,6 +41,8 @@ class RetrievalEngine:
                  cache_size: int = DEFAULT_CACHE):
         if backend not in ("xla", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
+        if k_top < 1:
+            raise ValueError(f"k_top must be >= 1, got {k_top}")
         self.index = index
         self.k_top = k_top
         self.backend = backend
@@ -105,7 +107,11 @@ class RetrievalEngine:
     def search(self, queries, k_top: Optional[int] = None):
         """queries (Nq, d) or a single (d,) vector. Returns
         (dists (Nq, k_top), indices (Nq, k_top)) as numpy arrays."""
-        k = k_top or self.k_top
+        # `is None`, not truthiness: `k_top or default` silently mapped an
+        # explicit k_top=0 to the default instead of rejecting it
+        k = self.k_top if k_top is None else k_top
+        if k < 1:
+            raise ValueError(f"k_top must be >= 1, got {k}")
         caching = self.cache_size > 0
         # keys come from host bytes, so with the cache on, stay in numpy
         # until the hit check fails — a full hit never touches the device
@@ -151,18 +157,26 @@ class RetrievalEngine:
             return dists[0], idxs[0]
         return dists, idxs
 
-    def warmup(self):
-        """Compile every bucket up front so first requests don't pay jit."""
+    def warmup(self, ks: Optional[Sequence[int]] = None):
+        """Compile every (bucket, k) combination up front so first
+        requests don't pay jit. ``ks`` defaults to just the engine's
+        ``k_top``; pass the non-default k values clients will request
+        (each distinct k is its own compile)."""
+        ks = (self.k_top,) if ks is None else tuple(ks)
+        for k in ks:
+            if k < 1:
+                raise ValueError(f"k_top must be >= 1, got {k}")
         d = self.index.L.shape[1]
-        for b in self.buckets:
-            self.index.topk(jnp.zeros((b, d), jnp.float32), self.k_top,
-                            backend=self.backend)
+        for k in ks:
+            for b in self.buckets:
+                self.index.topk(jnp.zeros((b, d), jnp.float32), k,
+                                backend=self.backend)
 
     def stats(self) -> dict:
         # device qps over device-served queries only: cache hits add no
         # busy time and would inflate the ratio under repeat traffic
         qps = self.n_device_queries / self.busy_s if self.busy_s > 0 else 0.0
-        return {
+        out = {
             "n_requests": self.n_requests,
             "n_queries": self.n_queries,
             "n_device_queries": self.n_device_queries,
@@ -176,3 +190,12 @@ class RetrievalEngine:
             "cache_misses": self.cache_misses,
             "cache_entries": len(self._cache),
         }
+        # mutation lifecycle counters, when the backend has them
+        # (serve/mutable.py MutableIndex)
+        for key, attr in (("delta_rows", "delta_rows"),
+                          ("tombstones", "tombstones"),
+                          ("compactions", "n_compactions")):
+            value = getattr(self.index, attr, None)
+            if value is not None:
+                out[key] = value
+        return out

@@ -75,6 +75,18 @@ class ExactIndex:
     def build(cls, L, gallery, mesh=None, rules=None) -> "ExactIndex":
         """Project the gallery through L once and (optionally) shard it."""
         gp, gn = project_gallery(L, gallery)
+        return cls.from_projected(L, gp, gn, mesh=mesh, rules=rules)
+
+    @classmethod
+    def from_projected(cls, L, gp, gn, mesh=None, rules=None) -> "ExactIndex":
+        """Construct from already-projected rows (gp (M,k), gn (M,)).
+
+        The mutation/snapshot layer (serve/mutable.py, serve/snapshot.py)
+        enters here: compaction folds delta rows and snapshot load restores
+        segments without ever re-projecting the gallery through L.
+        """
+        gp = jnp.asarray(gp, jnp.float32)
+        gn = jnp.asarray(gn, jnp.float32)
         axes: Tuple[str, ...] = ()
         if mesh is not None:
             axes = scan.gallery_axes(mesh, gp.shape[0], rules)

@@ -204,6 +204,24 @@ class IVFIndex:
         found via their adoptive cluster (a bounded recall trade).
         """
         gp, gn = project_gallery(L, gallery)
+        return cls.build_projected(L, gp, gn, n_clusters=n_clusters,
+                                   nprobe=nprobe, iters=iters, seed=seed,
+                                   cap_factor=cap_factor, mesh=mesh,
+                                   rules=rules)
+
+    @classmethod
+    def build_projected(cls, L, gp, gn, n_clusters: int = 64,
+                        nprobe: int = 8, *, iters: int = 10, seed: int = 0,
+                        cap_factor: float = 1.25, mesh=None,
+                        rules=None) -> "IVFIndex":
+        """Cluster + lay out already-projected rows (gp (M,k), gn (M,)).
+
+        The compaction-triggered rebuild and metric hot-swap
+        (serve/mutable.py) enter here: they already hold projected rows
+        and must not pay a second gallery projection.
+        """
+        gp = jnp.asarray(gp, jnp.float32)
+        gn = jnp.asarray(gn, jnp.float32)
         M, k = gp.shape
         axes: Tuple[str, ...] = ()
         if mesh is not None:

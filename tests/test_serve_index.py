@@ -249,6 +249,53 @@ class TestEngineCache:
         assert ivf.stats()["index"] == "IVFIndex"
 
 
+class TestEngineValidation:
+    def _engine(self, **kw):
+        rng = np.random.RandomState(0)
+        L = jnp.asarray(0.3 * rng.randn(8, 16), jnp.float32)
+        G = jnp.asarray(rng.randn(200, 16), jnp.float32)
+        q = rng.randn(6, 16).astype(np.float32)
+        return RetrievalEngine(ExactIndex.build(L, G), k_top=5, **kw), q
+
+    def test_k_top_zero_rejected(self):
+        # regression: `k_top or self.k_top` silently mapped an explicit
+        # k_top=0 to the engine default instead of rejecting it
+        eng, q = self._engine()
+        with pytest.raises(ValueError, match="k_top"):
+            eng.search(q, k_top=0)
+        with pytest.raises(ValueError, match="k_top"):
+            eng.search(q, k_top=-3)
+        d, i = eng.search(q)                    # default path unharmed
+        assert i.shape == (6, 5)
+
+    def test_batcher_k_top_zero_rejected(self):
+        from repro.serve import MicroBatcher
+        eng, q = self._engine()
+        batcher = MicroBatcher(eng)
+        try:
+            with pytest.raises(ValueError, match="k_top"):
+                batcher.submit(q[0], k_top=0)
+            assert batcher.submit(q[0]).result(timeout=30)[1].shape == (5,)
+        finally:
+            batcher.close()
+
+    def test_engine_ctor_k_top_validated(self):
+        rng = np.random.RandomState(0)
+        idx = ExactIndex.build(
+            jnp.asarray(0.3 * rng.randn(8, 16), jnp.float32),
+            jnp.asarray(rng.randn(50, 16), jnp.float32))
+        with pytest.raises(ValueError, match="k_top"):
+            RetrievalEngine(idx, k_top=0)
+
+    def test_warmup_accepts_k_list(self):
+        eng, q = self._engine()
+        eng.warmup(ks=[2, 5])                   # pre-compile non-default k
+        d, i = eng.search(q, k_top=2)
+        assert i.shape == (6, 2)
+        with pytest.raises(ValueError, match="k_top"):
+            eng.warmup(ks=[0])
+
+
 @pytest.mark.slow
 class TestIVFRecallSweep:
     def test_recall_monotone_in_nprobe(self):

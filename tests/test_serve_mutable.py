@@ -1,0 +1,330 @@
+"""Mutable-gallery lifecycle tests: upserts, deletes, compaction,
+snapshots, metric hot-swap, and the engine integration.
+
+The contract under test, from ISSUE/ROADMAP "gallery mutation": a
+MutableIndex over either base must agree *exactly* with a from-scratch
+rebuild over the live rows after any upsert/delete sequence — before and
+after compaction — and a snapshot must reload to bit-for-bit identical
+answers at the same version.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.serve import (ExactIndex, IVFIndex, MutableIndex,
+                         RetrievalEngine, load_index, recall_at_k,
+                         save_index)
+from repro.serve.snapshot import l_fingerprint
+
+D, K = 24, 12
+
+
+def _data(M=400, seed=0, n_blobs=12):
+    rng = np.random.RandomState(seed)
+    centers = 3.0 * rng.randn(n_blobs, D).astype(np.float32)
+    G = centers[rng.randint(0, n_blobs, M)] \
+        + 0.3 * rng.randn(M, D).astype(np.float32)
+    L = (0.3 * rng.randn(K, D)).astype(np.float32)
+    q = G[rng.randint(0, M, 9)] + 0.1 * rng.randn(9, D).astype(np.float32)
+    return L, G, q, rng
+
+
+def _rebuild_topk(mut, queries, k_top):
+    """Ground truth: a from-scratch ExactIndex over the *live raw rows*
+    in ascending-external-id order (requires retain_raw)."""
+    ids = mut.live_ids()
+    rows = np.empty((len(ids), mut.raw_base.shape[1]), np.float32)
+    for r, e in enumerate(ids.tolist()):
+        kind, i = mut._loc[int(e)]
+        rows[r] = mut.raw_base[i] if kind == "base" else mut.raw_delta[i]
+    ref = ExactIndex.build(mut.L, jnp.asarray(rows))
+    d, i = ref.topk(jnp.asarray(queries), k_top)
+    return np.asarray(d), ids[np.asarray(i)]
+
+
+def _assert_matches_rebuild(mut, queries, k_top=10, **kw):
+    d_ref, i_ref = _rebuild_topk(mut, queries, k_top)
+    d, i = mut.topk(jnp.asarray(queries), k_top, **kw)
+    np.testing.assert_array_equal(i, i_ref)
+    # ids exact; distances to fp tolerance (the IVF gather scores with an
+    # einsum whose accumulation order differs from the exact matmul —
+    # same tolerance test_serve_index pins for IVF vs ExactIndex)
+    np.testing.assert_allclose(d, d_ref, rtol=1e-4, atol=1e-3)
+
+
+def _mut(base="exact", M=400, seed=0, **kw):
+    L, G, q, rng = _data(M=M, seed=seed)
+    base_kw = dict(n_clusters=8, nprobe=8) if base == "ivf" else {}
+    mut = MutableIndex.build(L, G, base=base, retain_raw=True,
+                             auto_compact_delta=0, auto_compact_dead=0,
+                             **base_kw, **kw)
+    return mut, G, q, rng
+
+
+class TestMutableLifecycle:
+    # ivf runs at nprobe == n_clusters (exact pruning) so rebuild
+    # agreement is well-defined for both bases
+    @pytest.mark.parametrize("base", ["exact", "ivf"])
+    def test_upsert_delete_update_matches_rebuild(self, base):
+        mut, G, q, rng = _mut(base)
+        _assert_matches_rebuild(mut, q)
+
+        new_ids = mut.upsert(rng.randn(37, D).astype(np.float32))
+        _assert_matches_rebuild(mut, q)
+
+        mut.delete(np.arange(25))                       # base tombstones
+        mut.delete(new_ids[:5])                         # delta tombstones
+        _assert_matches_rebuild(mut, q)
+
+        # update = upsert of an existing id: old slot dies, new row serves
+        mut.upsert(rng.randn(4, D).astype(np.float32),
+                   ids=np.asarray([30, 31, *new_ids[5:7]]))
+        _assert_matches_rebuild(mut, q)
+        assert mut.size == 400 + 37 - 25 - 5
+
+    @pytest.mark.parametrize("base", ["exact", "ivf"])
+    def test_compaction_preserves_answers(self, base):
+        mut, G, q, rng = _mut(base)
+        mut.upsert(rng.randn(30, D).astype(np.float32))
+        mut.delete(np.arange(20))
+        d_pre, i_pre = mut.topk(jnp.asarray(q), 10)
+        assert mut.compact()
+        assert mut.delta_rows == 0 and mut.tombstones == 0
+        d_post, i_post = mut.topk(jnp.asarray(q), 10)
+        np.testing.assert_array_equal(i_post, i_pre)
+        np.testing.assert_array_equal(d_post, d_pre)
+        _assert_matches_rebuild(mut, q)
+        assert not mut.compact()                        # clean -> no-op
+
+    @pytest.mark.parametrize("base", ["exact", "ivf"])
+    def test_random_sequence_property(self, base):
+        # seeded random op stream; rebuild-agreement is the invariant
+        mut, G, q, rng = _mut(base, M=300, seed=3)
+        for step in range(12):
+            op = rng.randint(0, 3)
+            if op == 0:
+                mut.upsert(rng.randn(rng.randint(1, 30), D)
+                           .astype(np.float32))
+            elif op == 1 and mut.size > 60:
+                live = mut.live_ids()
+                mut.delete(rng.choice(live, rng.randint(1, 20),
+                                      replace=False))
+            else:
+                live = mut.live_ids()
+                pick = rng.choice(live, rng.randint(1, 10), replace=False)
+                mut.upsert(rng.randn(len(pick), D).astype(np.float32),
+                           ids=pick)
+            if step % 4 == 3:
+                mut.compact()
+            _assert_matches_rebuild(mut, q)
+
+    def test_ivf_headroom_fold_vs_spill_rebuild(self):
+        mut, G, q, rng = _mut("ivf")
+        cap_free = mut.base.n_clusters * mut.base.cap - mut.base.size
+        mut.upsert(rng.randn(min(cap_free, 20), D).astype(np.float32))
+        mut.compact()
+        assert mut.n_compactions == 1 and mut.n_rebuilds == 0
+        _assert_matches_rebuild(mut, q)
+        # overflow the total headroom -> the fold spills -> k-means rebuild
+        mut.upsert(rng.randn(cap_free + 50, D).astype(np.float32))
+        mut.compact()
+        assert mut.n_rebuilds == 1
+        _assert_matches_rebuild(mut, q)
+
+    def test_ivf_modest_nprobe_recall_under_churn(self):
+        mut, G, q, rng = _mut("ivf", M=2000)
+        mut.upsert(G[rng.randint(0, 2000, 100)]
+                   + 0.1 * rng.randn(100, D).astype(np.float32))
+        mut.delete(rng.choice(2000, 100, replace=False))
+        d_ref, i_ref = _rebuild_topk(mut, q, 10)
+        _, i_a = mut.topk(jnp.asarray(q), 10, nprobe=4)
+        assert recall_at_k(i_a, i_ref) >= 0.9
+
+    def test_version_bumps_per_batch(self):
+        mut, G, q, rng = _mut()
+        v0 = mut.version
+        mut.upsert(rng.randn(3, D).astype(np.float32))
+        assert mut.version == v0 + 1                    # one bump per batch
+        mut.delete(np.asarray([0, 1]))
+        assert mut.version == v0 + 2
+        mut.compact()
+        assert mut.version == v0 + 3
+
+    def test_auto_compaction_thresholds(self):
+        L, G, q, rng = _data()
+        mut = MutableIndex.build(L, G, base="exact",
+                                 auto_compact_delta=0.05,
+                                 auto_compact_dead=0)
+        mut.upsert(rng.randn(30, D).astype(np.float32))  # > 5% of 400
+        assert mut.n_compactions == 1 and mut.delta_rows == 0
+        assert mut.base.size == 430
+
+    def test_validation_errors(self):
+        mut, G, q, rng = _mut()
+        with pytest.raises(ValueError):
+            mut.topk(jnp.asarray(q), 0)
+        with pytest.raises(ValueError):
+            mut.topk(jnp.asarray(q), mut.size + 1)
+        with pytest.raises(KeyError):
+            mut.delete(np.asarray([10**9]))             # unknown id
+        with pytest.raises(ValueError):
+            mut.delete(np.asarray([1, 1]))              # duplicate batch
+        with pytest.raises(ValueError):
+            mut.upsert(rng.randn(2, D).astype(np.float32),
+                       ids=np.asarray([-1, 5]))         # negative id
+        with pytest.raises(NotImplementedError):
+            # sharded bases are not wrappable (single-host subsystem)
+            class FakeSharded:
+                n_shards = 2
+            MutableIndex(FakeSharded(), mut.L)
+
+    def test_deleted_ids_are_reusable(self):
+        mut, G, q, rng = _mut()
+        mut.delete(np.asarray([7]))
+        assert not mut.contains(7)
+        mut.upsert(rng.randn(1, D).astype(np.float32), ids=np.asarray([7]))
+        assert mut.contains(7)
+        _assert_matches_rebuild(mut, q)
+
+
+class TestSnapshot:
+    @pytest.mark.parametrize("kind", ["exact", "ivf", "mutable",
+                                      "mutable_ivf"])
+    def test_round_trip_bit_for_bit(self, kind, tmp_path):
+        L, G, q, rng = _data()
+        if kind == "exact":
+            index = ExactIndex.build(L, jnp.asarray(G))
+        elif kind == "ivf":
+            index = IVFIndex.build(L, jnp.asarray(G), n_clusters=8,
+                                   nprobe=8)
+        else:
+            base = "ivf" if kind == "mutable_ivf" else "exact"
+            index = _mut(base)[0]
+            index.upsert(rng.randn(17, D).astype(np.float32))
+            index.delete(np.arange(9))
+        d_ref, i_ref = index.topk(jnp.asarray(q), 10)
+        save_index(index, str(tmp_path))
+        restored = load_index(str(tmp_path))
+        assert restored.version == index.version
+        assert restored.size == index.size
+        d, i = restored.topk(jnp.asarray(q), 10)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(i_ref))
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(d_ref))
+
+    def test_mutate_save_load_mutate_property(self, tmp_path):
+        # build -> mutate -> save -> load -> the restored index keeps
+        # serving AND keeps mutating exactly like the original
+        mut, G, q, rng = _mut()
+        mut.upsert(rng.randn(21, D).astype(np.float32))
+        mut.delete(np.arange(11))
+        save_index(mut, str(tmp_path))
+        restored = load_index(str(tmp_path))
+        more = rng.randn(5, D).astype(np.float32)
+        ids_a = mut.upsert(more)
+        ids_b = restored.upsert(more)
+        np.testing.assert_array_equal(ids_a, ids_b)     # same next_id state
+        d_a, i_a = mut.topk(jnp.asarray(q), 10)
+        d_b, i_b = restored.topk(jnp.asarray(q), 10)
+        np.testing.assert_array_equal(i_a, i_b)
+        np.testing.assert_array_equal(d_a, d_b)
+        restored.compact()
+        _assert_matches_rebuild(restored, q)
+
+    def test_fingerprint_guard(self, tmp_path):
+        L, G, q, rng = _data()
+        index = ExactIndex.build(L, jnp.asarray(G))
+        save_index(index, str(tmp_path))
+        load_index(str(tmp_path), expect_L=L)           # matching L: fine
+        with pytest.raises(ValueError, match="fingerprint"):
+            load_index(str(tmp_path), expect_L=L + 0.1)
+        assert l_fingerprint(L) != l_fingerprint(L + 0.1)
+
+    def test_missing_manifest_refused(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            load_index(str(tmp_path))
+
+
+class TestMetricHotSwap:
+    @pytest.mark.parametrize("base", ["exact", "ivf"])
+    def test_swap_matches_fresh_build(self, base):
+        mut, G, q, rng = _mut(base)
+        mut.upsert(rng.randn(15, D).astype(np.float32))
+        mut.delete(np.arange(10))
+        L2 = (0.3 * rng.randn(K, D)).astype(np.float32)
+        v0 = mut.version
+        mut.swap_metric(L2, block_rows=128)             # exercise blocking
+        assert mut.version > v0 and mut.n_swaps == 1
+        assert np.array_equal(np.asarray(mut.L), L2)
+        _assert_matches_rebuild(mut, q)                 # rebuild under L2
+
+    def test_swap_requires_retained_raw(self):
+        L, G, q, rng = _data()
+        mut = MutableIndex.build(L, G, base="exact", retain_raw=False)
+        with pytest.raises(ValueError, match="retain_raw"):
+            mut.swap_metric(L)
+
+    def test_swap_dimension_check(self):
+        mut, G, q, rng = _mut()
+        with pytest.raises(ValueError):
+            mut.swap_metric(np.zeros((K, D + 1), np.float32))
+
+
+class TestEngineIntegration:
+    def _engine(self, **kw):
+        mut, G, q, rng = _mut(M=200)
+        return RetrievalEngine(mut, k_top=5, **kw), mut, q, rng
+
+    def test_cache_flush_on_each_mutation_batch(self):
+        eng, mut, q, rng = self._engine(cache_size=64)
+        eng.search(q)
+        eng.search(q)
+        assert eng.stats()["cache_hits"] == 9
+        mut.upsert(rng.randn(1, D).astype(np.float32))  # version bump
+        eng.search(q)                                   # must recompute
+        st = eng.stats()
+        assert st["cache_hits"] == 9 and st["cache_misses"] == 18
+        mut.delete(np.asarray([0]))
+        eng.search(q)
+        assert eng.stats()["cache_misses"] == 27
+        mut.compact()
+        eng.search(q)
+        assert eng.stats()["cache_misses"] == 36
+
+    def test_mutation_visible_through_engine(self):
+        eng, mut, q, rng = self._engine(cache_size=64)
+        row = (10.0 + 0.01 * rng.randn(D)).astype(np.float32)
+        (ext,) = mut.upsert(row).tolist()
+        d, i = eng.search(row)                          # its own neighbor
+        assert i[0] == ext
+        mut.delete(np.asarray([ext]))
+        d, i = eng.search(row)                          # cached? no: flushed
+        assert i[0] != ext
+
+    def test_stats_surface_lifecycle_counters(self):
+        eng, mut, q, rng = self._engine()
+        mut.upsert(rng.randn(7, D).astype(np.float32))
+        mut.delete(np.asarray([3]))
+        st = eng.stats()
+        assert st["delta_rows"] == 7
+        assert st["tombstones"] == 1
+        assert st["compactions"] == 0
+        mut.compact()
+        assert eng.stats()["compactions"] == 1
+        # plain indexes don't grow the keys
+        plain = RetrievalEngine(ExactIndex.build(mut.L, jnp.asarray(
+            np.random.RandomState(0).randn(50, D).astype(np.float32))),
+            k_top=5)
+        assert "delta_rows" not in plain.stats()
+
+    def test_batcher_front_door(self):
+        from repro.serve import MicroBatcher
+        eng, mut, q, rng = self._engine()
+        batcher = MicroBatcher(eng, max_batch=8, max_wait_ms=1.0)
+        futs = [batcher.submit(qr) for qr in q]
+        ref_d, ref_i = mut.topk(jnp.asarray(q), 5)
+        for r, fut in enumerate(futs):
+            d, i = fut.result(timeout=30)
+            np.testing.assert_array_equal(i, ref_i[r])
+        batcher.close()
