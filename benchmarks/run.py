@@ -8,7 +8,9 @@ after each section's own output.
   fig4    -> metric quality: ours vs Xing2002/ITML/KISS/Euclidean (Fig. 4)
   roofline-> per (arch x shape x mesh) roofline terms from the dry-run
   retrieval_qps -> serving: fused metric top-k vs per-pair XLA reference
-  retrieval_recall -> serving: IVF recall@10-vs-QPS frontier vs exact scan
+  retrieval_recall -> serving: IVF + IVF-PQ recall@10-vs-QPS frontiers
+             vs the exact scan (PQ: uint8 residual codes, ADC tables,
+             exact rerank)
   gallery_churn -> serving: QPS + recall@10 under sustained upsert/delete
              churn with periodic compaction (MutableIndex)
 """

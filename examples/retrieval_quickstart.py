@@ -8,7 +8,10 @@ neighbors under M = L^T L. This example learns L on pair constraints
 top-k neighbors under the learned metric are far more class-pure than
 Euclidean neighbors on the same data. It then swaps the same engine onto
 the cluster-pruned IVFIndex and shows near-identical neighbors while
-scanning a fraction of the gallery per query. Finally it walks the
+scanning a fraction of the gallery per query, and onto the
+product-quantized IVFPQIndex — the same probes over uint8 residual codes
+(~8x less segment memory), with an exact re-rank recovering the
+quantization loss. Finally it walks the
 mutable-gallery lifecycle: stream rows in and out (MutableIndex), compact
 the delta, snapshot to disk and reload bit-for-bit, and hot-swap the
 metric — starting from the identity (Euclidean) factor and swapping in
@@ -25,7 +28,7 @@ import numpy as np
 from repro.core import dml
 from repro.core.ps.trainer import train_dml_single
 from repro.data import pairs as pairdata
-from repro.serve import (ExactIndex, IVFIndex, MutableIndex,
+from repro.serve import (ExactIndex, IVFIndex, IVFPQIndex, MutableIndex,
                          RetrievalEngine, load_index, recall_at_k,
                          save_index)
 
@@ -81,6 +84,27 @@ def main():
           f"{ivf.nprobe * ivf.cap} of {ivf.size} rows/query): "
           f"recall@10 vs exact {recall:.3f}, purity {p_ivf:.3f}")
     assert recall > 0.8
+
+    # --- product-quantized segments: same probes, ~8x fewer bytes --------
+    # each scanned row is n_subspaces uint8 codes (of its residual to the
+    # cluster centroid) + one f32, scored via per-query ADC lookup tables;
+    # the top rerank_depth candidates re-score exactly at full precision
+    pq = IVFPQIndex.build(L, jnp.asarray(gallery), n_clusters=16,
+                          nprobe=4, n_subspaces=8, bits=8,
+                          rerank_depth=30)
+    ivf_bytes = ivf.gp_pad.nbytes + ivf.gn_pad.nbytes
+    pq_bytes = pq.codes_pad.nbytes + pq.t_pad.nbytes
+    print(f"ivfpq segment memory: {pq_bytes / 1e3:.0f} kB vs IVF "
+          f"{ivf_bytes / 1e3:.0f} kB ({ivf_bytes / pq_bytes:.1f}x "
+          f"smaller; {pq.pq.code_bytes} code bytes/row)")
+    _, nbrs_raw = pq.topk(queries, 10, rerank=0)       # raw ADC order
+    _, nbrs_rr = pq.topk(queries, 10)                  # + exact rerank
+    r_raw = recall_at_k(np.asarray(nbrs_raw), nbrs)
+    r_rr = recall_at_k(np.asarray(nbrs_rr), nbrs)
+    print(f"ivfpq recall@10 vs exact: {r_raw:.3f} raw ADC -> {r_rr:.3f} "
+          f"with rerank {pq.rerank_depth} (quantization error recovered; "
+          f"remaining loss is probe-limited, same as IVF)")
+    assert r_rr >= r_raw and r_rr > 0.8
 
     # --- mutable gallery: stream rows, compact, snapshot, hot-swap -------
     # start from the identity metric (= Euclidean serving) and keep the

@@ -12,8 +12,14 @@ class — the quality the learned metric buys at serve time).
 
 ``--index exact`` scans the whole gallery (ExactIndex); ``--index ivf``
 builds the cluster-pruned ANN index (IVFIndex) and scans only the
-``--nprobe`` nearest of ``--n-clusters`` gallery segments per query.
-``--cache-size`` bounds the engine's hot-query LRU (0 disables).
+``--nprobe`` nearest of ``--n-clusters`` gallery segments per query;
+``--index ivfpq`` additionally compresses the scanned segments to uint8
+product-quantization codes (``--n-subspaces`` codes of ``--bits`` bits
+per row, trained on residuals to the cluster centroids) scored by
+ADC lookup tables, with the top ``--rerank-depth`` candidates re-scored
+exactly against the full-precision store (``--pq-store host`` keeps that
+store in RAM instead of device memory). ``--cache-size`` bounds the
+engine's hot-query LRU (0 disables).
 
 ``--mutable`` wraps the index in a MutableIndex (streaming upserts /
 deletes / compaction / metric hot-swap); ``--churn N`` then exercises N
@@ -49,12 +55,24 @@ def main():
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--max-wait-ms", type=float, default=2.0)
     ap.add_argument("--backend", choices=["xla", "pallas"], default="xla")
-    ap.add_argument("--index", choices=["exact", "ivf"], default="exact")
+    ap.add_argument("--index", choices=["exact", "ivf", "ivfpq"],
+                    default="exact")
     ap.add_argument("--n-clusters", type=int, default=64,
-                    help="ivf: gallery segments (rounds up to a multiple "
-                         "of the shard count)")
+                    help="ivf/ivfpq: gallery segments (ivf rounds up to "
+                         "a multiple of the shard count)")
     ap.add_argument("--nprobe", type=int, default=8,
-                    help="ivf: clusters scanned per query")
+                    help="ivf/ivfpq: clusters scanned per query")
+    ap.add_argument("--n-subspaces", type=int, default=8,
+                    help="ivfpq: uint8 codes per row (code bytes/row)")
+    ap.add_argument("--bits", type=int, default=8,
+                    help="ivfpq: log2 codewords per subspace (1..8)")
+    ap.add_argument("--rerank-depth", type=int, default=50,
+                    help="ivfpq: ADC candidates re-scored exactly per "
+                         "query (0 serves raw ADC distances)")
+    ap.add_argument("--pq-store", choices=["device", "host"],
+                    default="device",
+                    help="ivfpq: where the full-precision rerank rows "
+                         "live (host = RAM only, saves device memory)")
     ap.add_argument("--cache-size", type=int, default=1024,
                     help="engine hot-query LRU entries (0 disables)")
     ap.add_argument("--mutable", action="store_true",
@@ -73,12 +91,15 @@ def main():
                     help=">1 forces that many host devices and shards "
                          "the gallery over the data axis")
     args = ap.parse_args()
-    if args.index == "ivf" and args.backend == "pallas":
-        ap.error("--index ivf only supports --backend xla (the fused "
-                 "pallas kernel serves the exact full-scan path)")
+    if args.index in ("ivf", "ivfpq") and args.backend == "pallas":
+        ap.error(f"--index {args.index} only supports --backend xla (the "
+                 "fused pallas kernel serves the exact full-scan path)")
     if args.data > 1 and (args.mutable or args.snapshot_dir):
         ap.error("--mutable / --snapshot-dir are single-shard "
                  "(incompatible with --data > 1)")
+    if args.data > 1 and args.index == "ivfpq":
+        ap.error("--index ivfpq is single-shard (incompatible with "
+                 "--data > 1)")
     if args.churn and not args.mutable:
         ap.error("--churn requires --mutable")
 
@@ -95,9 +116,9 @@ def main():
     from repro.core.ps.trainer import train_dml_single
     from repro.data import pairs as pairdata
     from repro.launch.mesh import make_local_mesh
-    from repro.serve import (ExactIndex, IVFIndex, MicroBatcher,
-                             MutableIndex, RetrievalEngine, has_snapshot,
-                             load_index, save_index)
+    from repro.serve import (ExactIndex, IVFIndex, IVFPQIndex,
+                             MicroBatcher, MutableIndex, RetrievalEngine,
+                             has_snapshot, load_index, save_index)
 
     # --- data + metric ---------------------------------------------------
     cfg = pairdata.PairDatasetConfig(
@@ -119,6 +140,9 @@ def main():
     # --- serving stack ---------------------------------------------------
     mesh = make_local_mesh(data=args.data) if args.data > 1 else None
     ivf_kw = dict(n_clusters=args.n_clusters, nprobe=args.nprobe)
+    ivfpq_kw = dict(ivf_kw, n_subspaces=args.n_subspaces, bits=args.bits,
+                    rerank_depth=args.rerank_depth, store=args.pq_store)
+    base_kw = {"exact": {}, "ivf": ivf_kw, "ivfpq": ivfpq_kw}[args.index]
     t0 = time.perf_counter()
     loaded = bool(args.snapshot_dir) and has_snapshot(args.snapshot_dir)
     if loaded:
@@ -129,8 +153,10 @@ def main():
                      f"--snapshot-dir elsewhere or drop --mutable")
     elif args.mutable:
         index = MutableIndex.build(
-            L, feats, base=args.index, retain_raw=True,
-            **(ivf_kw if args.index == "ivf" else {}))
+            L, feats, base=args.index, retain_raw=True, **base_kw)
+    elif args.index == "ivfpq":
+        index = IVFPQIndex.build(L, jnp.asarray(feats), mesh=mesh,
+                                 **ivfpq_kw)
     elif args.index == "ivf":
         index = IVFIndex.build(L, jnp.asarray(feats), mesh=mesh, **ivf_kw)
     else:
@@ -149,11 +175,18 @@ def main():
     print(f"index[{type(index).__name__}]: {index.size} x {args.proj_dim} "
           f"({index.n_shards} shard(s)), {verb} in {build_s:.2f}s")
     ivf = index.base if isinstance(index, MutableIndex) else index
-    if isinstance(ivf, IVFIndex):
+    if isinstance(ivf, (IVFIndex, IVFPQIndex)):
         scanned = ivf.nprobe * ivf.cap
-        print(f"  ivf: {ivf.n_clusters} clusters, cap {ivf.cap}, "
-              f"nprobe {ivf.nprobe} -> <= {scanned} of {ivf.size} rows "
-              f"scanned per query ({scanned / max(ivf.size, 1):.1%})")
+        print(f"  {type(ivf).__name__}: {ivf.n_clusters} clusters, cap "
+              f"{ivf.cap}, nprobe {ivf.nprobe} -> <= {scanned} of "
+              f"{ivf.size} rows scanned per query "
+              f"({scanned / max(ivf.size, 1):.1%})")
+    if isinstance(ivf, IVFPQIndex):
+        print(f"  pq: {ivf.pq.n_subspaces} x {ivf.pq.bits}-bit codes "
+              f"({ivf.code_bytes_per_row} B/row scanned vs "
+              f"{4 * args.proj_dim + 4} full precision, "
+              f"{ivf.compression_ratio:.1f}x), rerank depth "
+              f"{ivf.rerank_depth}, store={ivf.store}")
 
     batcher = MicroBatcher(engine, max_batch=args.max_batch,
                            max_wait_ms=args.max_wait_ms)

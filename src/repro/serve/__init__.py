@@ -2,12 +2,14 @@
 
 Query-side subsystem for the learned metric M = L^T L: a pluggable index
 hierarchy (index.py MetricIndex protocol, ExactIndex full scan; ivf.py
-IVFIndex cluster-pruned ANN) over the shared projection/shard/merge
-substrate (scan.py), the mutation lifecycle layer (mutable.py MutableIndex
-streaming upserts/deletes + compaction + metric hot-swap; snapshot.py
-save/load without re-projection), a bucketed jitted execution engine with
-a hot-query LRU cache (engine.py), and a request-coalescing front door
-(batcher.py). The fused device path is kernels/metric_topk.
+IVFIndex cluster-pruned ANN; pq.py IVFPQIndex residual-product-quantized
+segments with ADC scoring + exact rerank) over the shared
+projection/shard/merge substrate (scan.py), the mutation lifecycle layer
+(mutable.py MutableIndex streaming upserts/deletes + compaction + metric
+hot-swap; snapshot.py save/load without re-projection), a bucketed jitted
+execution engine with a hot-query LRU cache (engine.py), and a
+request-coalescing front door (batcher.py). The fused device path is
+kernels/metric_topk.
 """
 
 from repro.serve.batcher import MicroBatcher  # noqa: F401
@@ -16,6 +18,7 @@ from repro.serve.index import (ExactIndex, GalleryIndex,  # noqa: F401
                                MetricIndex)
 from repro.serve.ivf import IVFIndex, kmeans_projected  # noqa: F401
 from repro.serve.mutable import MutableIndex  # noqa: F401
+from repro.serve.pq import IVFPQIndex, ProductQuantizer  # noqa: F401
 from repro.serve.scan import recall_at_k  # noqa: F401
 from repro.serve.snapshot import (has_snapshot, l_fingerprint,  # noqa: F401
                                   load_index, save_index)

@@ -15,7 +15,9 @@ The engine owns the serving concerns the index should not know about:
   * **counters** — requests / queries / wall-clock / cache hit-miss for
     QPS reporting via ``stats()``.
 
-Works against any MetricIndex backend (serve/index.py, serve/ivf.py).
+Works against any MetricIndex backend (serve/index.py exact scan,
+serve/ivf.py cluster-pruned, serve/pq.py product-quantized, and
+serve/mutable.py wrapping any of them).
 """
 
 from __future__ import annotations
@@ -35,10 +37,29 @@ DEFAULT_CACHE = 1024
 
 
 class RetrievalEngine:
+    """Query executor over a MetricIndex: bucketing + caching + counters.
+
+    One engine serves one index (swap ``engine.index`` to repoint it; the
+    cache notices the identity change and flushes). Thread-safety: calls
+    are expected from a single worker thread — the MicroBatcher front
+    door provides exactly that.
+    """
+
     def __init__(self, index: MetricIndex, k_top: int = 10,
                  backend: str = "xla",
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
                  cache_size: int = DEFAULT_CACHE):
+        """Args:
+          index: any MetricIndex backend (Exact / IVF / IVFPQ / Mutable).
+          k_top: default neighbors per query (>= 1; per-call override in
+            ``search``).
+          backend: "xla" (default; the only option for IVF/IVFPQ/sharded)
+            or "pallas" (fused kernel, single-device ExactIndex).
+          buckets: ascending jit batch sizes; batches pad up to the next
+            bucket (an oversized batch is served as-is, one extra
+            compile).
+          cache_size: hot-query LRU entries (0 disables caching).
+        """
         if backend not in ("xla", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
         if k_top < 1:
@@ -173,6 +194,15 @@ class RetrievalEngine:
                                 backend=self.backend)
 
     def stats(self) -> dict:
+        """Serving counters as a plain dict (safe to log/serialize).
+
+        Always present: n_requests / n_queries / n_device_queries,
+        busy_s, qps (device-side), gallery_size, n_shards, backend,
+        index (class name), cache_hits / cache_misses / cache_entries.
+        Backend extras appear when the index exposes them: delta_rows /
+        tombstones / compactions (MutableIndex), code_bytes_per_row /
+        compression_ratio (IVFPQIndex).
+        """
         # device qps over device-served queries only: cache hits add no
         # busy time and would inflate the ratio under repeat traffic
         qps = self.n_device_queries / self.busy_s if self.busy_s > 0 else 0.0
@@ -190,11 +220,14 @@ class RetrievalEngine:
             "cache_misses": self.cache_misses,
             "cache_entries": len(self._cache),
         }
-        # mutation lifecycle counters, when the backend has them
-        # (serve/mutable.py MutableIndex)
+        # backend-specific extras, surfaced when the index has them:
+        # mutation lifecycle counters (serve/mutable.py MutableIndex) and
+        # compression figures (serve/pq.py IVFPQIndex)
         for key, attr in (("delta_rows", "delta_rows"),
                           ("tombstones", "tombstones"),
-                          ("compactions", "n_compactions")):
+                          ("compactions", "n_compactions"),
+                          ("code_bytes_per_row", "code_bytes_per_row"),
+                          ("compression_ratio", "compression_ratio")):
             value = getattr(self.index, attr, None)
             if value is not None:
                 out[key] = value

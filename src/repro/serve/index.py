@@ -53,13 +53,27 @@ class MetricIndex(Protocol):
     def n_shards(self) -> int: ...      # mesh shards the rows live on
 
     def topk(self, queries, k_top: int, backend: str = "xla"):
-        """(dists (Nq, k_top) ascending, global row ids (Nq, k_top))."""
+        """(dists (Nq, k_top) ascending, global row ids (Nq, k_top)).
+
+        ``queries`` are raw (Nq, d) vectors; implementations project
+        them through L internally. Distances are squared metric
+        distances; approximate backends may accept extra keywords
+        (``nprobe``, ``rerank``) and mark unservable slots with id -1.
+        """
         ...
 
 
 @dataclasses.dataclass(eq=False)
 class ExactIndex:
-    """Immutable exact retrieval index over a pre-projected gallery."""
+    """Immutable exact retrieval index over a pre-projected gallery.
+
+    Invariants: ``gp`` holds ``gallery @ L^T`` and ``gn`` its row norms
+    (never recomputed after build); answers are exact for the stored
+    rows, deterministic across backends and shardings (equal distances
+    tie toward the smaller row id); ``version`` only changes when a
+    wrapper (MutableIndex / snapshot load) assigns it — this class never
+    mutates itself.
+    """
 
     L: jax.Array                    # (k, d) replicated metric factor
     gp: jax.Array                   # (M, k) projected gallery rows
@@ -73,7 +87,17 @@ class ExactIndex:
 
     @classmethod
     def build(cls, L, gallery, mesh=None, rules=None) -> "ExactIndex":
-        """Project the gallery through L once and (optionally) shard it."""
+        """Project the gallery through L once and (optionally) shard it.
+
+        Args:
+          L: (k, d) metric factor (replicated across the mesh).
+          gallery: (M, d) raw gallery rows.
+          mesh / rules: optional jax Mesh + partition rules; when given,
+            rows shard over the logical "gallery" axis (M must divide by
+            the shard count — scan.gallery_axes checks).
+
+        Returns a ready-to-query index (the one-time O(M*d*k) cost).
+        """
         gp, gn = project_gallery(L, gallery)
         return cls.from_projected(L, gp, gn, mesh=mesh, rules=rules)
 
@@ -98,17 +122,26 @@ class ExactIndex:
 
     @property
     def size(self) -> int:
+        """Number of (real) gallery rows."""
         return self.gp.shape[0]
 
     @property
     def n_shards(self) -> int:
+        """Mesh shards the rows live on (1 when unsharded)."""
         return scan.n_shards(self.mesh, self.axes)
 
     def topk(self, queries, k_top: int, backend: str = "xla"):
-        """(dists (Nq, k_top) ascending, global indices (Nq, k_top)).
+        """Exact k nearest gallery rows per query.
 
-        backend: "xla" (factored fast path; the only sharded option) or
-        "pallas" (fused kernel, single-device; interpret off-TPU).
+        Args:
+          queries: (Nq, d) raw queries (projected through L here).
+          k_top: neighbors per query (1 <= k_top <= size).
+          backend: "xla" (factored fast path; the only sharded option)
+            or "pallas" (fused kernel, single-device; interpret
+            off-TPU).
+
+        Returns (dists (Nq, k_top) f32 ascending, global row indices
+        (Nq, k_top) int32); equal distances tie toward the smaller id.
         """
         if k_top > self.size:
             raise ValueError(f"k_top={k_top} > gallery size {self.size}")

@@ -173,7 +173,16 @@ def _balance_assign(gp, centroids, assign, cap: int) -> np.ndarray:
 
 @dataclasses.dataclass(eq=False)
 class IVFIndex:
-    """Cluster-pruned approximate retrieval index (MetricIndex backend)."""
+    """Cluster-pruned approximate retrieval index (MetricIndex backend).
+
+    Invariants: segments are cluster-major with a common capacity
+    (static shapes keep the jitted query paths hot); pad slots carry
+    ``gn = +BIG`` / ``id = -1`` sentinels and can only surface when the
+    probed clusters hold fewer than k_top real rows; at ``nprobe ==
+    n_clusters`` answers match ExactIndex on indices (ties at the k_top
+    boundary between exactly duplicated rows excepted — see
+    scan.topk_by_distance).
+    """
 
     L: jax.Array                    # (k, d) replicated metric factor
     centroids: jax.Array            # (C, k) cluster centers, replicated
@@ -265,25 +274,41 @@ class IVFIndex:
 
     @property
     def size(self) -> int:
+        """Real (unpadded) gallery rows."""
         return self.n_rows
 
     @property
     def n_shards(self) -> int:
+        """Mesh shards the segments live on (1 when unsharded)."""
         return scan.n_shards(self.mesh, self.axes)
 
     def topk(self, queries, k_top: int, backend: str = "xla",
              nprobe: Optional[int] = None):
-        """(dists (Nq, k_top) ascending, global indices (Nq, k_top)).
+        """Approximate k nearest gallery rows per query.
 
-        Approximate: only the ``nprobe`` nearest clusters are scanned
-        (defaults to the build-time setting; ``n_clusters`` = exact).
+        Args:
+          queries: (Nq, d) raw queries (projected through L here).
+          k_top: neighbors per query (<= size and <= nprobe * cap — the
+            candidate pool actually scanned).
+          backend: "xla" only.
+          nprobe: clusters scanned per query (defaults to the build-time
+            setting; ``n_clusters`` scans everything = exact).
+
+        Returns (dists (Nq, k_top) f32 ascending, global row indices
+        (Nq, k_top) int32); -1 ids mark under-filled probes (raise
+        nprobe if callers see them).
         """
         if backend != "xla":
             raise NotImplementedError(
                 "IVFIndex only supports the xla backend")
         if k_top > self.size:
             raise ValueError(f"k_top={k_top} > gallery size {self.size}")
-        np_ = min(nprobe or self.nprobe, self.n_clusters)
+        # `is None`, not truthiness: `nprobe or default` would silently
+        # map an explicit nprobe=0 to the default (the k_top=0 bug class)
+        np_ = self.nprobe if nprobe is None else nprobe
+        if np_ < 1:
+            raise ValueError(f"nprobe must be >= 1, got {np_}")
+        np_ = min(np_, self.n_clusters)
         if k_top > np_ * self.cap:
             raise ValueError(
                 f"k_top={k_top} > nprobe*cap={np_ * self.cap} scanned "

@@ -6,7 +6,8 @@ production gallery is not — rows arrive and expire continuously, and the
 async PS trainer keeps producing fresh L factors. ``MutableIndex`` closes
 that gap with the classic LSM split:
 
-  base      any frozen MetricIndex (Exact or IVF), untouched by mutations;
+  base      any frozen MetricIndex (Exact, IVF, or IVFPQ), untouched by
+            mutations;
   delta     an append-only buffer of *pre-projected* new rows, scanned
             exactly (it stays small between compactions);
   tombstones  dead slots — deleted rows, and rows superseded by an upsert
@@ -36,6 +37,10 @@ Compaction folds the delta into the base and drops tombstones:
               slots freed by tombstones); if the live delta outgrows the
               total free capacity, the fold *spills* and triggers a full
               rebuild (fresh k-means over all live projected rows).
+  IVFPQ base  same headroom fold, with each folded row *encoded* against
+              the existing residual codebooks (delta rows are served
+              full-precision until then); a spill-triggered rebuild
+              re-trains k-means and the codebooks together.
 
 ``compact()`` can be called explicitly; ``auto_compact_delta`` /
 ``auto_compact_dead`` thresholds (fractions of the base size) trigger it
@@ -67,6 +72,7 @@ from repro.kernels.metric_topk.kernel import BIG
 from repro.serve import scan
 from repro.serve.index import ExactIndex
 from repro.serve.ivf import IVFIndex
+from repro.serve.pq import IVFPQIndex, _t_term
 
 _DELTA_MIN_CAP = 256    # device delta buffer floor; grows by doubling so
                         # the jitted delta scan retraces O(log growth) times
@@ -82,8 +88,15 @@ class MutableIndex:
             raise NotImplementedError(
                 "MutableIndex wraps single-shard bases only (multi-host "
                 "gallery mutation is a ROADMAP item)")
-        if not isinstance(base, (ExactIndex, IVFIndex)):
+        if not isinstance(base, (ExactIndex, IVFIndex, IVFPQIndex)):
             raise TypeError(f"unsupported base index {type(base).__name__}")
+        if isinstance(base, IVFPQIndex) and base.rerank_depth < 1:
+            # the (distance, id) merge against the exact delta scan is
+            # only sound when the base returns exact distances too —
+            # raw ADC scores would mis-order against delta candidates
+            raise ValueError(
+                "MutableIndex over an IVFPQ base requires rerank_depth "
+                ">= 1 (exact base distances for the delta merge)")
         M = base.size
         self.base = base
         self.L = jnp.asarray(L, jnp.float32)
@@ -130,20 +143,27 @@ class MutableIndex:
               auto_compact_dead: float = 0.25, **base_kwargs):
         """Build the base index and wrap it.
 
-        ``base``: "exact" or "ivf" (``base_kwargs`` forward to the base
-        build — n_clusters, nprobe, cap_factor, ...). ``ids`` assigns
-        external ids to the initial rows (default 0..M-1, which keeps the
-        deterministic smallest-id tie-break aligned with the base's
-        positional one). ``retain_raw=True`` keeps the raw feature rows so
-        ``swap_metric`` can re-project under a fresh L.
+        ``base``: "exact", "ivf", or "ivfpq" (``base_kwargs`` forward to
+        the base build — n_clusters, nprobe, cap_factor, n_subspaces,
+        ...). ``ids`` assigns external ids to the initial rows (default
+        0..M-1, which keeps the deterministic smallest-id tie-break
+        aligned with the base's positional one). ``retain_raw=True``
+        keeps the raw feature rows so ``swap_metric`` can re-project
+        under a fresh L.
+
+        An IVFPQ base serves its frozen rows from uint8 codes while the
+        delta buffer stays full-precision and exact; compaction encodes
+        folded rows with the existing codebooks (see ``compact``).
         """
         gallery = np.asarray(gallery, np.float32)
         if base == "exact":
             b = ExactIndex.build(L, jnp.asarray(gallery), **base_kwargs)
         elif base == "ivf":
             b = IVFIndex.build(L, jnp.asarray(gallery), **base_kwargs)
+        elif base == "ivfpq":
+            b = IVFPQIndex.build(L, jnp.asarray(gallery), **base_kwargs)
         else:
-            raise ValueError(f"unknown base {base!r} (exact|ivf)")
+            raise ValueError(f"unknown base {base!r} (exact|ivf|ivfpq)")
         return cls(b, L, ids=ids, raw=gallery if retain_raw else None,
                    base_kwargs=base_kwargs,
                    auto_compact_delta=auto_compact_delta,
@@ -164,6 +184,17 @@ class MutableIndex:
     def delta_rows(self) -> int:
         """Live rows currently served from the delta buffer."""
         return int((~self.dead_delta).sum())
+
+    @property
+    def code_bytes_per_row(self):
+        """Forwarded from an IVFPQ base (None otherwise) so engine
+        stats() surfaces compression figures through the wrapper."""
+        return getattr(self.base, "code_bytes_per_row", None)
+
+    @property
+    def compression_ratio(self):
+        """Forwarded from an IVFPQ base (None otherwise)."""
+        return getattr(self.base, "compression_ratio", None)
 
     @property
     def tombstones(self) -> int:
@@ -189,6 +220,13 @@ class MutableIndex:
         if k_top > self.size:
             raise ValueError(f"k_top={k_top} > live gallery size "
                              f"{self.size}")
+        if isinstance(self.base, IVFPQIndex) and kw.get("rerank") == 0:
+            # same soundness rule the ctor enforces for rerank_depth:
+            # raw ADC base distances cannot merge against the exact
+            # delta scan
+            raise ValueError(
+                "rerank=0 is unsupported through MutableIndex (the "
+                "(distance, id) delta merge needs exact base distances)")
         queries = jnp.asarray(queries, jnp.float32)
         if queries.ndim != 2:
             raise ValueError(f"queries must be (Nq, d), got "
@@ -230,14 +268,18 @@ class MutableIndex:
                 np.take_along_axis(ids, order, 1))
 
     def _base_pool(self, kw) -> Optional[int]:
-        """Candidate pool the base can actually return (IVF: nprobe*cap).
-        Oversampling past it would make the base raise; clamping instead
-        costs only the (already approximate) IVF recall of dead-slot
-        oversamples."""
-        if isinstance(self.base, IVFIndex):
-            np_ = min(kw.get("nprobe") or self.base.nprobe,
-                      self.base.n_clusters)
-            return np_ * self.base.cap
+        """Candidate pool the base can actually return (IVF/IVFPQ:
+        nprobe*cap). Oversampling past it would make the base raise;
+        clamping instead costs only the (already approximate) recall of
+        dead-slot oversamples."""
+        if isinstance(self.base, (IVFIndex, IVFPQIndex)):
+            np_ = kw.get("nprobe")
+            if np_ is not None and np_ < 1:
+                # reject here: a 0 pool would silently skip the base
+                # scan before the base's own nprobe validation can fire
+                raise ValueError(f"nprobe must be >= 1, got {np_}")
+            np_ = self.base.nprobe if np_ is None else np_
+            return min(np_, self.base.n_clusters) * self.base.cap
         return None
 
     # -- delta scan ----------------------------------------------------------
@@ -374,6 +416,11 @@ class MutableIndex:
         if isinstance(self.base, ExactIndex):
             gp_b = np.asarray(self.base.gp)[lb]
             gn_b = np.asarray(self.base.gn)[lb]
+        elif isinstance(self.base, IVFPQIndex):
+            # the PQ base keeps exact rows in its (host) rerank store,
+            # already in base-position order — codes are never decoded
+            gp_b = self.base.gp_full[lb]
+            gn_b = self.base.gn_full[lb]
         else:
             gp_b, gn_b = self._ivf_live_gp(lb)
         ids = np.concatenate([self.base_ids[lb], self.delta_ids[ld]])
@@ -404,11 +451,18 @@ class MutableIndex:
         Exact base: concatenate + re-wrap (no re-projection). IVF base:
         delta rows land in nearest-centroid capacity headroom; if the live
         delta exceeds the total free capacity the fold spills and triggers
-        a full rebuild (fresh k-means). Returns True if anything changed.
+        a full rebuild (fresh k-means). IVFPQ base: same headroom fold,
+        but each folded row is *encoded* with the existing residual
+        codebooks (no PQ retrain — quantization quality can drift if the
+        live distribution shifts far from the build-time residuals; a
+        spill-triggered rebuild re-trains both k-means and the
+        codebooks). Returns True if anything changed.
         """
         if self.delta_rows == 0 and self.tombstones == 0:
             return False
-        if isinstance(self.base, IVFIndex):
+        if isinstance(self.base, IVFPQIndex):
+            self._compact_ivfpq()
+        elif isinstance(self.base, IVFIndex):
             self._compact_ivf()
         else:
             self._compact_exact()
@@ -441,7 +495,24 @@ class MutableIndex:
         if raw is not None:
             self.raw_base = raw
 
-    def _compact_ivf(self):
+    def _fold_segments(self, clear_dead, place_delta, rebuild, remake):
+        """Shared IVF/IVFPQ compaction skeleton (one copy of the
+        invariant-bearing bookkeeping; the payload differs per backend).
+
+        Steps: free dead slots, remap kept slots' ids to the new
+        ascending-external-id order, spill-check the headroom (falling
+        back to a full rebuild), then greedily place each live delta row
+        in its nearest centroid with a free slot — the same rule as the
+        build's balanced assignment. The callbacks own the payload
+        arrays:
+
+          clear_dead(dead_slots)                wipe freed slots
+          place_delta(slots, clusters, rows)    write placed delta rows
+          rebuild(gp, gn)                       spill path: rebuild
+                                                self.base from live rows
+          remake(ids_pad, new_ids, lb, live_d, order)
+                                                construct the folded base
+        """
         base = self.base
         C, cap = base.n_clusters, base.cap
         live_d = np.flatnonzero(~self.dead_delta)
@@ -450,15 +521,12 @@ class MutableIndex:
                                    self.delta_ids[live_d]])
         new_ids = np.sort(ext_live)
 
-        gp_pad = np.asarray(base.gp_pad).copy()
-        gn_pad = np.asarray(base.gn_pad).copy()
         ids_pad = np.asarray(base.ids_pad).copy()
         occ_slots = np.flatnonzero(ids_pad >= 0)
         old_pos = ids_pad[occ_slots]
         keep = lb[old_pos]
         dead_slots = occ_slots[~keep]
-        gp_pad[dead_slots] = 0.0
-        gn_pad[dead_slots] = BIG
+        clear_dead(dead_slots)
         ids_pad[dead_slots] = -1
         kept_slots = occ_slots[keep]
         ids_pad[kept_slots] = np.searchsorted(
@@ -467,10 +535,7 @@ class MutableIndex:
         n_free = C * cap - len(kept_slots)
         if n_free < len(live_d):            # headroom spill -> full rebuild
             gp, gn, ids, raw = self._live_state()
-            kw = {k: v for k, v in self._base_kwargs.items()
-                  if k in ("iters", "seed", "cap_factor")}
-            self.base = IVFIndex.build_projected(
-                self.L, gp, gn, n_clusters=C, nprobe=base.nprobe, **kw)
+            rebuild(gp, gn)
             self.base_ids = ids
             if raw is not None:
                 self.raw_base = raw
@@ -478,40 +543,113 @@ class MutableIndex:
             return
 
         # in-place fold: each delta row takes a free slot in its nearest
-        # centroid (spilling to the next-nearest with space, same greedy
-        # rule as the build's balanced assignment)
+        # centroid (spilling to the next-nearest with space)
         free = [list(np.flatnonzero(ids_pad[c * cap:(c + 1) * cap] == -1))
                 for c in range(C)]
         cent = np.asarray(base.centroids)
         d_dc = (np.sum(self.delta_gp[live_d] ** 2, axis=1)[:, None]
                 + np.sum(cent ** 2, axis=1)[None, :]
-                - 2.0 * self.delta_gp[live_d] @ cent.T)
-        for i, row in enumerate(live_d):
+                - 2.0 * self.delta_gp[live_d] @ cent.T)     # (live, C)
+        slots = np.empty(len(live_d), np.int64)
+        clusters = np.empty(len(live_d), np.int64)
+        for i in range(len(live_d)):
             for c in np.argsort(d_dc[i]):
                 if free[c]:
-                    slot = c * cap + free[c].pop(0)
-                    gp_pad[slot] = self.delta_gp[row]
-                    gn_pad[slot] = self.delta_gn[row]
-                    ids_pad[slot] = np.searchsorted(
-                        new_ids, self.delta_ids[row]).astype(np.int32)
+                    slots[i] = c * cap + free[c].pop(0)
+                    clusters[i] = c
                     break
+        place_delta(slots, clusters, live_d)
+        ids_pad[slots] = np.searchsorted(
+            new_ids, self.delta_ids[live_d]).astype(np.int32)
 
-        raw = None
+        order = np.argsort(ext_live)
         if self.raw_base is not None:
-            raw = np.concatenate([self.raw_base[lb],
-                                  self.raw_delta[live_d]])
-            order = np.argsort(ext_live)
-            raw = raw[order]
-        # fresh instance: the old one's jitted fns close over the old
-        # segment arrays and must not be reused
-        self.base = IVFIndex(
-            L=base.L, centroids=base.centroids, gp_pad=jnp.asarray(gp_pad),
-            gn_pad=jnp.asarray(gn_pad), ids_pad=jnp.asarray(ids_pad),
-            cap=cap, n_clusters=C, nprobe=base.nprobe,
-            n_rows=len(new_ids), block_q=base.block_q)
+            self.raw_base = np.concatenate(
+                [self.raw_base[lb], self.raw_delta[live_d]])[order]
+        # remake returns a fresh base instance: the old one's jitted fns
+        # close over the old segment arrays and must not be reused
+        remake(ids_pad, new_ids, lb, live_d, order)
         self.base_ids = new_ids
-        if raw is not None:
-            self.raw_base = raw
+
+    def _rebuild_kwargs(self):
+        return {k: v for k, v in self._base_kwargs.items()
+                if k in ("iters", "seed", "cap_factor")}
+
+    def _compact_ivf(self):
+        """IVF fold: delta rows land full-precision in nearest-centroid
+        capacity headroom (see ``_fold_segments``)."""
+        base = self.base
+        gp_pad = np.asarray(base.gp_pad).copy()
+        gn_pad = np.asarray(base.gn_pad).copy()
+
+        def clear_dead(dead_slots):
+            gp_pad[dead_slots] = 0.0
+            gn_pad[dead_slots] = BIG
+
+        def place_delta(slots, clusters, rows):
+            gp_pad[slots] = self.delta_gp[rows]
+            gn_pad[slots] = self.delta_gn[rows]
+
+        def rebuild(gp, gn):
+            self.base = IVFIndex.build_projected(
+                self.L, gp, gn, n_clusters=base.n_clusters,
+                nprobe=base.nprobe, **self._rebuild_kwargs())
+
+        def remake(ids_pad, new_ids, lb, live_d, order):
+            self.base = IVFIndex(
+                L=base.L, centroids=base.centroids,
+                gp_pad=jnp.asarray(gp_pad), gn_pad=jnp.asarray(gn_pad),
+                ids_pad=jnp.asarray(ids_pad), cap=base.cap,
+                n_clusters=base.n_clusters, nprobe=base.nprobe,
+                n_rows=len(new_ids), block_q=base.block_q)
+
+        self._fold_segments(clear_dead, place_delta, rebuild, remake)
+
+    def _compact_ivfpq(self):
+        """IVFPQ fold: each placed delta row is encoded against the
+        *existing* codebooks (one batched encode per compaction) and the
+        host full-precision store rebuilds in external-id order; a
+        headroom spill rebuilds k-means *and* codebooks (see
+        ``_fold_segments``)."""
+        base = self.base
+        codes_pad = np.asarray(base.codes_pad).copy()
+        t_pad = np.asarray(base.t_pad).copy()
+
+        def clear_dead(dead_slots):
+            codes_pad[dead_slots] = 0
+            t_pad[dead_slots] = BIG
+
+        def place_delta(slots, clusters, rows):
+            if not len(rows):
+                return
+            cent = np.asarray(base.centroids)[clusters]
+            res = self.delta_gp[rows] - cent
+            codes = np.asarray(base.pq.encode(jnp.asarray(res)))
+            codes_pad[slots] = codes
+            t_pad[slots] = _t_term(base.pq, codes, cent)
+
+        def rebuild(gp, gn):
+            self.base = IVFPQIndex.build_projected(
+                self.L, gp, gn, n_clusters=base.n_clusters,
+                nprobe=base.nprobe, n_subspaces=base.pq.n_subspaces,
+                bits=base.pq.bits, rerank_depth=base.rerank_depth,
+                store=base.store, **self._rebuild_kwargs())
+
+        def remake(ids_pad, new_ids, lb, live_d, order):
+            gp_full = np.concatenate([base.gp_full[lb],
+                                      self.delta_gp[live_d]])[order]
+            gn_full = np.concatenate([base.gn_full[lb],
+                                      self.delta_gn[live_d]])[order]
+            self.base = IVFPQIndex(
+                L=base.L, centroids=base.centroids, pq=base.pq,
+                codes_pad=jnp.asarray(codes_pad),
+                t_pad=jnp.asarray(t_pad), ids_pad=jnp.asarray(ids_pad),
+                gp_full=gp_full, gn_full=gn_full, cap=base.cap,
+                n_clusters=base.n_clusters, nprobe=base.nprobe,
+                n_rows=len(new_ids), rerank_depth=base.rerank_depth,
+                store=base.store, block_q=base.block_q)
+
+        self._fold_segments(clear_dead, place_delta, rebuild, remake)
 
     # -- metric hot-swap -----------------------------------------------------
 
@@ -552,12 +690,18 @@ class MutableIndex:
             gns.append(np.asarray(gn_b))
         gp = np.concatenate(gps)
         gn = np.concatenate(gns)
-        if isinstance(self.base, IVFIndex):
-            kw = {k: v for k, v in self._base_kwargs.items()
-                  if k in ("iters", "seed", "cap_factor")}
+        if isinstance(self.base, IVFPQIndex):
+            new_base = IVFPQIndex.build_projected(
+                L_new, gp, gn, n_clusters=self.base.n_clusters,
+                nprobe=self.base.nprobe,
+                n_subspaces=self.base.pq.n_subspaces,
+                bits=self.base.pq.bits,
+                rerank_depth=self.base.rerank_depth,
+                store=self.base.store, **self._rebuild_kwargs())
+        elif isinstance(self.base, IVFIndex):
             new_base = IVFIndex.build_projected(
                 L_new, gp, gn, n_clusters=self.base.n_clusters,
-                nprobe=self.base.nprobe, **kw)
+                nprobe=self.base.nprobe, **self._rebuild_kwargs())
         else:
             new_base = ExactIndex.from_projected(L_new, gp, gn)
         # the flip: nothing above mutated served state

@@ -7,6 +7,9 @@ k-means) before the first query can be answered. Snapshots persist the
 
   base.npz      the frozen base index arrays — ExactIndex: L, gp, gn;
                 IVFIndex: L, centroids, gp_pad, gn_pad, ids_pad;
+                IVFPQIndex: L, centroids, codebooks, codes_pad, t_pad,
+                ids_pad plus the full-precision rerank store
+                (gp_full/gn_full);
   mutable.npz   (MutableIndex only) the mutation state: base_ids,
                 tombstone masks, the pre-projected delta buffer;
   raw.npz       (MutableIndex with retain_raw) the raw feature rows that
@@ -39,6 +42,7 @@ import numpy as np
 from repro.serve.index import ExactIndex
 from repro.serve.ivf import IVFIndex
 from repro.serve.mutable import MutableIndex
+from repro.serve.pq import IVFPQIndex, ProductQuantizer
 
 FORMAT = 1
 MANIFEST = "manifest.json"
@@ -51,6 +55,9 @@ def l_fingerprint(L) -> str:
 
 
 def has_snapshot(snapshot_dir: str) -> bool:
+    """True iff ``snapshot_dir`` holds a *complete* snapshot — i.e. its
+    manifest exists (the manifest is written last, so segments without
+    one are an interrupted save and load_index refuses them)."""
     return os.path.isfile(os.path.join(snapshot_dir, MANIFEST))
 
 
@@ -77,6 +84,21 @@ def _base_payload(index):
                 {"base_type": "ivf", "cap": index.cap,
                  "n_clusters": index.n_clusters, "nprobe": index.nprobe,
                  "n_rows": index.n_rows, "block_q": index.block_q})
+    if isinstance(index, IVFPQIndex):
+        return ({"L": np.asarray(index.L),
+                 "centroids": np.asarray(index.centroids),
+                 "codebooks": np.asarray(index.pq.codebooks),
+                 "codes_pad": np.asarray(index.codes_pad),
+                 "t_pad": np.asarray(index.t_pad),
+                 "ids_pad": np.asarray(index.ids_pad),
+                 "gp_full": np.asarray(index.gp_full),
+                 "gn_full": np.asarray(index.gn_full)},
+                {"base_type": "ivfpq", "cap": index.cap,
+                 "n_clusters": index.n_clusters, "nprobe": index.nprobe,
+                 "n_rows": index.n_rows, "block_q": index.block_q,
+                 "pq_dim": index.pq.dim,
+                 "rerank_depth": index.rerank_depth,
+                 "store": index.store})
     raise TypeError(f"cannot snapshot {type(index).__name__}")
 
 
@@ -86,6 +108,20 @@ def _load_base(path: str, meta: dict):
     L = jnp.asarray(arrays["L"])
     if meta["base_type"] == "exact":
         return ExactIndex.from_projected(L, arrays["gp"], arrays["gn"])
+    if meta["base_type"] == "ivfpq":
+        pq = ProductQuantizer(codebooks=jnp.asarray(arrays["codebooks"]),
+                              dim=int(meta["pq_dim"]))
+        return IVFPQIndex(
+            L=L, centroids=jnp.asarray(arrays["centroids"]), pq=pq,
+            codes_pad=jnp.asarray(arrays["codes_pad"]),
+            t_pad=jnp.asarray(arrays["t_pad"]),
+            ids_pad=jnp.asarray(arrays["ids_pad"]),
+            gp_full=arrays["gp_full"].astype(np.float32),
+            gn_full=arrays["gn_full"].astype(np.float32),
+            cap=int(meta["cap"]), n_clusters=int(meta["n_clusters"]),
+            nprobe=int(meta["nprobe"]), n_rows=int(meta["n_rows"]),
+            rerank_depth=int(meta["rerank_depth"]),
+            store=str(meta["store"]), block_q=int(meta["block_q"]))
     return IVFIndex(
         L=L, centroids=jnp.asarray(arrays["centroids"]),
         gp_pad=jnp.asarray(arrays["gp_pad"]),
@@ -96,8 +132,13 @@ def _load_base(path: str, meta: dict):
 
 
 def save_index(index, snapshot_dir: str) -> dict:
-    """Persist an ExactIndex / IVFIndex / MutableIndex. Returns the
-    manifest dict (already written to ``snapshot_dir``)."""
+    """Persist an ExactIndex / IVFIndex / IVFPQIndex / MutableIndex
+    (over any of those bases) to ``snapshot_dir``.
+
+    Writes the npz segments first and the manifest last (its presence
+    marks the snapshot complete; re-saving retracts the old manifest
+    before touching segments). Returns the manifest dict.
+    """
     _require_unsharded(index)
     os.makedirs(snapshot_dir, exist_ok=True)
     # re-saving over an existing snapshot: retract the old manifest first,
@@ -153,9 +194,16 @@ def save_index(index, snapshot_dir: str) -> dict:
 def load_index(snapshot_dir: str, *, expect_L=None):
     """Reconstruct a saved index; no gallery projection, no k-means.
 
-    ``expect_L`` (optional) asserts the snapshot was built under this
-    metric factor — a fingerprint mismatch raises ValueError before any
-    array loads (callers can then load plain and ``swap_metric``).
+    Args:
+      snapshot_dir: directory written by ``save_index``.
+      expect_L: optional metric factor to assert the snapshot was built
+        under — a fingerprint mismatch raises ValueError before any
+        array loads (callers can then load plain and ``swap_metric``).
+
+    Returns the restored index (same concrete type that was saved, same
+    ``version``); its top-k answers are bit-for-bit identical to the
+    saved index's. Raises FileNotFoundError on a missing/incomplete
+    snapshot and ValueError on a format or fingerprint mismatch.
     """
     path = os.path.join(snapshot_dir, MANIFEST)
     if not os.path.isfile(path):

@@ -1,0 +1,363 @@
+"""Product-quantization tests: PQ primitives, IVFPQ retrieval, lifecycle.
+
+The contracts under test:
+
+  * ProductQuantizer round trip — encode/decode reconstruction error is
+    bounded (and is exactly the per-subspace nearest-codeword error).
+  * ADC scoring — summing sqdist-table entries at a row's codes equals
+    decode-then-score within f32 tolerance (subspaces are orthogonal
+    coordinate blocks, so the identity is exact in real arithmetic).
+  * IVFPQIndex at nprobe == n_clusters with full-depth rerank equals
+    ExactIndex on indices — the same oracle IVFIndex pins.
+  * Snapshot round trip is bit-for-bit (frozen and mutable-wrapped).
+  * MutableIndex over an IVFPQ base agrees with an exact-base oracle
+    through upserts/deletes and across compaction.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.serve import (ExactIndex, IVFPQIndex, MutableIndex,
+                         ProductQuantizer, RetrievalEngine, load_index,
+                         recall_at_k, save_index)
+
+
+def _clustered(M, d, n_blobs, noise=0.3, seed=0):
+    rng = np.random.RandomState(seed)
+    centers = 3.0 * rng.randn(n_blobs, d).astype(np.float32)
+    blob = rng.randint(0, n_blobs, M)
+    pts = centers[blob] + noise * rng.randn(M, d).astype(np.float32)
+    return jnp.asarray(pts, jnp.float32), centers, rng
+
+
+def _setup(M=3000, d=48, k=24, n_blobs=24, seed=0):
+    pts, centers, rng = _clustered(M, d, n_blobs, seed=seed)
+    L = jnp.asarray(0.2 * rng.randn(k, d), jnp.float32)
+    q = jnp.asarray(centers[rng.randint(0, n_blobs, 12)]
+                    + 0.3 * rng.randn(12, d), jnp.float32)
+    return pts, L, q, rng
+
+
+class TestProductQuantizer:
+    def test_round_trip_error_bounded(self):
+        rng = np.random.RandomState(0)
+        vecs = jnp.asarray(rng.randn(2000, 32).astype(np.float32))
+        pq = ProductQuantizer.train(vecs, n_subspaces=8, bits=8, iters=8)
+        codes = pq.encode(vecs)
+        assert codes.dtype == jnp.uint8
+        assert codes.shape == (2000, 8)
+        dec = pq.decode(codes)
+        assert dec.shape == (2000, 32)
+        rel = float(jnp.mean(jnp.sum(jnp.square(vecs - dec), 1))
+                    / jnp.mean(jnp.sum(jnp.square(vecs), 1)))
+        # 256 codewords per 4-dim subspace on unit-variance gaussians:
+        # well under 15% relative squared error (typically ~7%)
+        assert rel < 0.15, f"round-trip rel sq error {rel:.3f}"
+
+    def test_more_bits_reduce_error(self):
+        rng = np.random.RandomState(1)
+        vecs = jnp.asarray(rng.randn(1500, 16).astype(np.float32))
+        errs = []
+        for bits in (2, 4, 8):
+            pq = ProductQuantizer.train(vecs, n_subspaces=4, bits=bits,
+                                        iters=6)
+            dec = pq.decode(pq.encode(vecs))
+            errs.append(float(jnp.mean(jnp.sum(jnp.square(vecs - dec),
+                                               1))))
+        assert errs[0] > errs[1] > errs[2]
+
+    def test_adc_matches_decode_then_score(self):
+        rng = np.random.RandomState(2)
+        vecs = jnp.asarray(rng.randn(600, 24).astype(np.float32))
+        q = jnp.asarray(rng.randn(9, 24).astype(np.float32))
+        pq = ProductQuantizer.train(vecs, n_subspaces=6, bits=6, iters=6)
+        codes = pq.encode(vecs)
+        dec = np.asarray(pq.decode(codes))
+        adc = np.asarray(pq.adc(pq.sqdist_tables(q), codes))
+        ref = np.sum((np.asarray(q)[:, None, :] - dec[None]) ** 2, axis=2)
+        np.testing.assert_allclose(adc, ref, rtol=1e-4, atol=1e-3)
+
+    def test_ip_tables_linear_identity(self):
+        # <q, decode(c)> must equal the summed ip-table entries — the
+        # linearity ADC's probe-independent tables rely on
+        rng = np.random.RandomState(3)
+        vecs = jnp.asarray(rng.randn(300, 20).astype(np.float32))
+        q = jnp.asarray(rng.randn(5, 20).astype(np.float32))
+        pq = ProductQuantizer.train(vecs, n_subspaces=5, bits=5, iters=5)
+        codes = pq.encode(vecs)
+        ips = np.asarray(pq.adc(pq.ip_tables(q), codes))
+        ref = np.asarray(q) @ np.asarray(pq.decode(codes)).T
+        np.testing.assert_allclose(ips, ref, rtol=1e-4, atol=1e-3)
+
+    def test_dim_not_divisible_by_subspaces(self):
+        rng = np.random.RandomState(4)
+        vecs = jnp.asarray(rng.randn(400, 15).astype(np.float32))
+        pq = ProductQuantizer.train(vecs, n_subspaces=4, bits=4, iters=4)
+        dec = pq.decode(pq.encode(vecs))
+        assert dec.shape == (400, 15)       # pad columns sliced back off
+
+    def test_tiny_training_set_pads_codebook(self):
+        rng = np.random.RandomState(5)
+        vecs = jnp.asarray(rng.randn(10, 8).astype(np.float32))
+        pq = ProductQuantizer.train(vecs, n_subspaces=2, bits=8, iters=3)
+        assert pq.codebooks.shape == (2, 256, 4)
+        codes = pq.encode(vecs)
+        assert int(codes.max()) < 256
+
+    def test_validation(self):
+        vecs = jnp.zeros((10, 8), jnp.float32)
+        with pytest.raises(ValueError):
+            ProductQuantizer.train(vecs, bits=9)
+        with pytest.raises(ValueError):
+            ProductQuantizer.train(vecs, n_subspaces=9)
+        with pytest.raises(ValueError):
+            ProductQuantizer.train(jnp.zeros((0, 8), jnp.float32))
+
+
+class TestIVFPQIndex:
+    def test_full_probe_full_rerank_matches_exact(self):
+        pts, L, q, _ = _setup()
+        exact = ExactIndex.build(L, pts)
+        idx = IVFPQIndex.build(L, pts, n_clusters=12, nprobe=12,
+                               rerank_depth=pts.shape[0], cap_factor=1.5)
+        d_e, i_e = exact.topk(q, 10)
+        d_p, i_p = idx.topk(q, 10)
+        np.testing.assert_array_equal(np.asarray(i_p), np.asarray(i_e))
+        np.testing.assert_allclose(np.asarray(d_p), np.asarray(d_e),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_host_store_matches_device_store(self):
+        pts, L, q, _ = _setup(seed=6)
+        kw = dict(n_clusters=12, nprobe=4, rerank_depth=30, seed=0)
+        dev = IVFPQIndex.build(L, pts, store="device", **kw)
+        host = IVFPQIndex.build(L, pts, store="host", **kw)
+        d_d, i_d = dev.topk(q, 10)
+        d_h, i_h = host.topk(q, 10)
+        np.testing.assert_array_equal(np.asarray(i_d), np.asarray(i_h))
+        np.testing.assert_allclose(np.asarray(d_d), np.asarray(d_h),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_rerank_recall_beats_raw(self):
+        pts, L, q, _ = _setup(M=4000, n_blobs=32)
+        exact = ExactIndex.build(L, pts)
+        idx = IVFPQIndex.build(L, pts, n_clusters=32, nprobe=8,
+                               n_subspaces=4, bits=4, rerank_depth=40)
+        _, i_e = exact.topk(q, 10)
+        _, i_raw = idx.topk(q, 10, rerank=0)
+        _, i_rr = idx.topk(q, 10)
+        r_raw = recall_at_k(i_raw, i_e)
+        r_rr = recall_at_k(i_rr, i_e)
+        # coarse 4x4-bit codes leave raw ADC ordering lossy; the exact
+        # rerank must recover (nearly) the probed-set ceiling
+        assert r_rr >= r_raw
+        assert r_rr >= 0.9
+
+    def test_rerank_distances_are_exact(self):
+        pts, L, q, _ = _setup(seed=7)
+        exact = ExactIndex.build(L, pts)
+        idx = IVFPQIndex.build(L, pts, n_clusters=12, nprobe=12,
+                               rerank_depth=25)
+        d_p, i_p = idx.topk(q, 10)
+        d_e, i_e = exact.topk(q, 10)
+        # full probe: candidate sets cover the true top-10 whenever the
+        # ADC top-25 does; wherever ids agree the distances must be the
+        # exact factored distances, not ADC approximations
+        same = np.asarray(i_p) == np.asarray(i_e)
+        np.testing.assert_allclose(np.asarray(d_p)[same],
+                                   np.asarray(d_e)[same],
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_compression_accounting(self):
+        pts, L, _, _ = _setup()
+        idx = IVFPQIndex.build(L, pts, n_clusters=12, n_subspaces=4,
+                               bits=8)
+        assert idx.pq.code_bytes == 4
+        assert idx.code_bytes_per_row == 8          # + the f32 t term
+        k = 24
+        assert idx.compression_ratio == (4 * k + 4) / 8
+        # scanned device segments really are uint8 codes
+        assert idx.codes_pad.dtype == jnp.uint8
+
+    def test_validation_and_protocol(self):
+        from repro.serve import MetricIndex
+        pts, L, q, _ = _setup()
+        idx = IVFPQIndex.build(L, pts, n_clusters=12, nprobe=2)
+        assert isinstance(idx, MetricIndex)
+        with pytest.raises(NotImplementedError):
+            idx.topk(q, 5, backend="pallas")
+        with pytest.raises(ValueError):
+            idx.topk(q, pts.shape[0] + 1)
+        with pytest.raises(ValueError):
+            IVFPQIndex.build(L, pts, n_clusters=12, store="ram")
+        with pytest.raises(ValueError):
+            idx.topk(q, 5, nprobe=0)    # explicit 0 must not mean default
+
+    def test_engine_integration(self):
+        pts, L, q, _ = _setup()
+        idx = IVFPQIndex.build(L, pts, n_clusters=12, nprobe=12,
+                               rerank_depth=pts.shape[0])
+        eng = RetrievalEngine(idx, k_top=10)
+        eng.warmup()
+        d, i = eng.search(np.asarray(q))
+        d_e, i_e = ExactIndex.build(L, pts).topk(q, 10)
+        np.testing.assert_array_equal(i, np.asarray(i_e))
+        st = eng.stats()
+        assert st["compression_ratio"] == idx.compression_ratio
+        assert st["code_bytes_per_row"] == idx.code_bytes_per_row
+
+
+class TestIVFPQSnapshot:
+    def test_frozen_round_trip_bit_for_bit(self, tmp_path):
+        pts, L, q, _ = _setup()
+        idx = IVFPQIndex.build(L, pts, n_clusters=12, nprobe=4,
+                               rerank_depth=30)
+        d0, i0 = idx.topk(q, 10)
+        save_index(idx, str(tmp_path))
+        restored = load_index(str(tmp_path))
+        assert isinstance(restored, IVFPQIndex)
+        assert restored.store == idx.store
+        assert restored.rerank_depth == idx.rerank_depth
+        d1, i1 = restored.topk(q, 10)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+    def test_mutable_round_trip_bit_for_bit(self, tmp_path):
+        pts, L, q, rng = _setup()
+        mut = MutableIndex.build(L, np.asarray(pts), base="ivfpq",
+                                 n_clusters=12, nprobe=12,
+                                 rerank_depth=3000, retain_raw=True)
+        mut.upsert(np.asarray(pts)[:40] + 0.01)
+        mut.delete(mut.live_ids()[:25])
+        d0, i0 = mut.topk(q, 10)
+        save_index(mut, str(tmp_path))
+        restored = load_index(str(tmp_path))
+        d1, i1 = restored.topk(q, 10)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+        # the restored index keeps mutating correctly
+        restored.upsert(np.asarray(pts)[:3] + 0.02)
+        assert restored.size == mut.size + 3
+
+
+class TestMutableOverIVFPQ:
+    def _mirrors(self, pts, L, **kw):
+        mut = MutableIndex.build(L, np.asarray(pts), base="ivfpq",
+                                 n_clusters=12, nprobe=12,
+                                 rerank_depth=5000, cap_factor=1.5,
+                                 **kw)
+        oracle = MutableIndex.build(L, np.asarray(pts), base="exact")
+        return mut, oracle
+
+    def test_upsert_delete_matches_oracle(self):
+        pts, L, q, rng = _setup()
+        mut, oracle = self._mirrors(pts, L)
+        fresh = np.asarray(pts)[rng.randint(0, 3000, 60)] + 0.01
+        ids = mut.upsert(fresh)
+        oracle.upsert(fresh, ids=ids)
+        retire = rng.choice(mut.live_ids(), 80, replace=False)
+        mut.delete(retire)
+        oracle.delete(retire)
+        d_m, i_m = mut.topk(q, 10)
+        d_o, i_o = oracle.topk(q, 10)
+        np.testing.assert_array_equal(i_m, i_o)
+        np.testing.assert_allclose(d_m, d_o, rtol=1e-4, atol=1e-4)
+
+    def test_compaction_agreement(self):
+        pts, L, q, rng = _setup()
+        mut, oracle = self._mirrors(pts, L)
+        fresh = np.asarray(pts)[rng.randint(0, 3000, 50)] + 0.01
+        ids = mut.upsert(fresh)
+        oracle.upsert(fresh, ids=ids)
+        retire = rng.choice(mut.live_ids(), 70, replace=False)
+        mut.delete(retire)
+        oracle.delete(retire)
+        d_pre, i_pre = mut.topk(q, 10)
+        assert mut.compact()
+        assert mut.delta_rows == 0 and mut.tombstones == 0
+        d_post, i_post = mut.topk(q, 10)
+        # headroom fold re-encodes delta rows with the frozen codebooks;
+        # rerank re-scores exactly, so answers must not move
+        np.testing.assert_array_equal(i_pre, i_post)
+        np.testing.assert_allclose(d_pre, d_post, rtol=1e-4, atol=1e-4)
+        d_o, i_o = oracle.topk(q, 10)
+        np.testing.assert_array_equal(i_post, i_o)
+
+    def test_spill_triggers_codebook_rebuild(self):
+        pts, L, q, rng = _setup(M=600)
+        mut = MutableIndex.build(L, np.asarray(pts), base="ivfpq",
+                                 n_clusters=6, nprobe=6,
+                                 rerank_depth=5000, cap_factor=1.05,
+                                 auto_compact_delta=0.0,
+                                 auto_compact_dead=0.0)
+        oracle = MutableIndex.build(L, np.asarray(pts), base="exact")
+        fresh = np.asarray(pts)[rng.randint(0, 600, 400)] + 0.01
+        ids = mut.upsert(fresh)
+        oracle.upsert(fresh, ids=ids)
+        mut.compact()
+        assert mut.n_rebuilds == 1          # headroom spill -> retrain
+        d_m, i_m = mut.topk(q, 10)
+        d_o, i_o = oracle.topk(q, 10)
+        np.testing.assert_array_equal(i_m, i_o)
+
+    def test_raw_adc_base_rejected(self):
+        pts, L, _, _ = _setup(M=500)
+        idx = IVFPQIndex.build(L, pts, n_clusters=6, rerank_depth=0)
+        with pytest.raises(ValueError):
+            MutableIndex(idx, L)
+
+    def test_raw_adc_query_rejected(self):
+        # the per-call escape hatch must be closed too: rerank=0 through
+        # the wrapper would merge approximate base distances against the
+        # exact delta scan
+        pts, L, q, _ = _setup(M=500)
+        mut = MutableIndex.build(L, np.asarray(pts), base="ivfpq",
+                                 n_clusters=6, rerank_depth=20)
+        mut.upsert(np.asarray(pts)[:5] + 0.01)
+        with pytest.raises(ValueError):
+            mut.topk(q, 5, rerank=0)
+        mut.topk(q, 5, rerank=10)           # nonzero depths stay allowed
+
+    def test_nprobe_zero_rejected_through_wrapper(self):
+        # nprobe=0 must raise, not silently skip the base scan
+        pts, L, q, _ = _setup(M=500)
+        mut = MutableIndex.build(L, np.asarray(pts), base="ivfpq",
+                                 n_clusters=6, rerank_depth=20)
+        with pytest.raises(ValueError):
+            mut.topk(q, 5, nprobe=0)
+
+    def test_engine_stats_through_wrapper(self):
+        pts, L, q, _ = _setup(M=500)
+        mut = MutableIndex.build(L, np.asarray(pts), base="ivfpq",
+                                 n_clusters=6, rerank_depth=20)
+        eng = RetrievalEngine(mut, k_top=5)
+        eng.search(np.asarray(q))
+        st = eng.stats()
+        # compression figures must survive the MutableIndex wrapper
+        assert st["compression_ratio"] == mut.base.compression_ratio
+        assert st["code_bytes_per_row"] == mut.base.code_bytes_per_row
+        assert "delta_rows" in st
+
+    def test_encode_chunking_invariant(self):
+        rng = np.random.RandomState(8)
+        vecs = jnp.asarray(rng.randn(1000, 16).astype(np.float32))
+        pq = ProductQuantizer.train(vecs, n_subspaces=4, bits=6, iters=5)
+        np.testing.assert_array_equal(
+            np.asarray(pq.encode(vecs, block_rows=128)),
+            np.asarray(pq.encode(vecs, block_rows=100000)))
+
+    def test_swap_metric_over_ivfpq(self):
+        pts, L, q, rng = _setup()
+        mut = MutableIndex.build(L, np.asarray(pts), base="ivfpq",
+                                 n_clusters=12, nprobe=12,
+                                 rerank_depth=5000, retain_raw=True)
+        L2 = jnp.asarray(0.2 * rng.randn(24, 48), jnp.float32)
+        mut.swap_metric(L2)
+        assert isinstance(mut.base, IVFPQIndex)
+        fresh = IVFPQIndex.build(L2, pts, n_clusters=12, nprobe=12,
+                                 rerank_depth=5000)
+        d_m, i_m = mut.topk(q, 10)
+        d_f, i_f = fresh.topk(q, 10)
+        ext = mut.live_ids()
+        np.testing.assert_array_equal(ext[np.asarray(i_f)], i_m)
