@@ -13,6 +13,10 @@ after each section's own output.
              exact rerank)
   gallery_churn -> serving: QPS + recall@10 under sustained upsert/delete
              churn with periodic compaction (MutableIndex)
+  mining_convergence -> closed loop: mined+curriculum training matches
+             uniform sampling's final kNN accuracy in <= 0.5x the steps
+             at equal batch size (HardPairMiner -> MinedPairSource ->
+             ClosedLoopTrainer over the serving index)
 """
 
 from __future__ import annotations
@@ -37,13 +41,15 @@ def main() -> None:
                             time.time() - t0))
 
     from benchmarks import (ablation_sync, fig2_convergence, fig3_speedup,
-                            fig4_quality, gallery_churn, retrieval_qps,
+                            fig4_quality, gallery_churn,
+                            mining_convergence, retrieval_qps,
                             retrieval_recall, roofline, table1_datasets)
 
     section("table1_datasets", table1_datasets.main)
     section("retrieval_qps", retrieval_qps.main)
     section("retrieval_recall", retrieval_recall.main)
     section("gallery_churn", gallery_churn.main)
+    section("mining_convergence", mining_convergence.main)
     section("fig4_quality", fig4_quality.main)
     section("fig2_convergence", fig2_convergence.main)
     section("fig3_speedup", fig3_speedup.main)

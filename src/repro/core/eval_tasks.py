@@ -26,7 +26,11 @@ def knn_classify(L: Optional[jax.Array], train_x, train_y, test_x,
     if L is None:
         L = jnp.eye(train_x.shape[1], dtype=jnp.float32)
     D = metric_sqdist_matrix(L, test_x, train_x)        # (n_test, n_train)
-    nn = jnp.argsort(D, axis=1)[:, :k]                  # (n_test, k)
+    # k-selection, not a full sort: lax.top_k on negated distances is
+    # O(n_train log k) per row vs argsort's O(n_train log n_train), and
+    # keeps the same smallest-index-first tie order argsort used; clamp
+    # like argsort's slice did (top_k raises on k > n_train)
+    _, nn = jax.lax.top_k(-D, min(k, D.shape[1]))       # (n_test, k)
     votes = jnp.asarray(train_y)[nn]                    # (n_test, k)
     n_classes = int(jnp.max(jnp.asarray(train_y))) + 1
     counts = jax.vmap(lambda v: jnp.bincount(v, length=n_classes))(votes)

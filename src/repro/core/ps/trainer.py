@@ -32,19 +32,46 @@ class DMLTrainConfig:
     log_every: int = 10
 
 
-def _stacked_batches(shards, batch_size, seed) -> Iterator[dict]:
+def stack_worker_streams(streams) -> Iterator[dict]:
     """Zip per-worker batch streams into (P, B, ...) stacked batches."""
-    streams = [pair_batches(s, batch_size, seed=seed + i)
-               for i, s in enumerate(shards)]
     while True:
         bs = [next(s) for s in streams]
         yield {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
 
 
-def train_dml_distributed(cfg: DMLTrainConfig, pairs: dict,
+def make_worker_streams(pairs, n_workers: int, batch_size: int, seed: int):
+    """Per-worker batch iterators from either pair representation.
+
+    ``pairs`` is pluggable: a pre-sampled pair dict (partitioned over
+    workers as in paper §4.1, then streamed with ``pair_batches``) or any
+    object with ``worker_streams(n_workers, batch_size, seed)`` — e.g.
+    ``mining/stream.MinedPairSource``, whose batches mix uniform and
+    index-mined hard pairs under a curriculum.
+    """
+    if hasattr(pairs, "worker_streams"):
+        return pairs.worker_streams(n_workers, batch_size, seed)
+    shards = partition_pairs(pairs, n_workers)
+    return [pair_batches(s, batch_size, seed=seed + i)
+            for i, s in enumerate(shards)]
+
+
+def _stacked_batches(shards, batch_size, seed) -> Iterator[dict]:
+    """Back-compat shim: stream pre-partitioned pair-dict shards."""
+    return stack_worker_streams(
+        [pair_batches(s, batch_size, seed=seed + i)
+         for i, s in enumerate(shards)])
+
+
+def train_dml_distributed(cfg: DMLTrainConfig, pairs,
                           opt: Optional[Optimizer] = None,
-                          mesh=None, rng=None):
+                          mesh=None, rng=None, step_hook=None):
     """Distributed DML training (paper §4) under a chosen sync model.
+
+    ``pairs`` is either a pair dict (the uniform path) or a pluggable
+    pair source (see ``make_worker_streams``). ``step_hook(step, L)``,
+    if given, is called with the merged metric at every logged step and
+    its return value (when not None) lands in that history record under
+    ``"hook"`` — e.g. a periodic kNN eval.
 
     Returns (L_merged, history) — history is a list of per-step metric dicts.
     """
@@ -63,14 +90,19 @@ def train_dml_distributed(cfg: DMLTrainConfig, pairs: dict,
                                     compute_dtype=cfg.dml.compute_dtype)
 
     step_fn = sync.make_train_step(loss_fn, opt, cfg.ps, mesh)
-    shards = partition_pairs(pairs, cfg.ps.n_workers)
-    batches = _stacked_batches(shards, cfg.batch_size, seed=cfg.ps.seed)
+    batches = stack_worker_streams(make_worker_streams(
+        pairs, cfg.ps.n_workers, cfg.batch_size, cfg.ps.seed))
 
     history = []
     for t in range(cfg.steps):
         state, metrics = step_fn(state, next(batches))
         if t % cfg.log_every == 0 or t == cfg.steps - 1:
-            history.append({"step": t, **jax.tree.map(float, metrics)})
+            rec = {"step": t, **jax.tree.map(float, metrics)}
+            if step_hook is not None:
+                out = step_hook(t, sync.worker_mean(state.params))
+                if out is not None:
+                    rec["hook"] = out
+            history.append(rec)
     L = sync.worker_mean(state.params)
     return L, history
 

@@ -75,33 +75,76 @@ def make_features(cfg: PairDatasetConfig) -> Tuple[np.ndarray, np.ndarray]:
     return x, labels
 
 
+def _draw_pair_indices(rng, labels: np.ndarray, n_pairs: int,
+                       want_same: bool, dedup: bool = True):
+    """Rejection-sample (a, b) index pairs of the requested kind.
+
+    Self-pairs (a == b) are always masked — they carry zero gradient for
+    similar constraints and are label-inconsistent for dissimilar ones.
+    With ``dedup`` (default), duplicate constraints within the draw are
+    dropped too, treating (a, b) and (b, a) as the same unordered
+    constraint, so every returned pair is distinct.
+    """
+    n = labels.shape[0]
+    a = np.empty(n_pairs, np.int64)
+    b = np.empty(n_pairs, np.int64)
+    # canonical min*n+max keys taken so far, kept SORTED: membership is
+    # then a searchsorted per round instead of np.isin's full re-sort of
+    # the accumulated set (which goes quadratic-ish at the paper's
+    # 200M-pair scale), and the merge below is a linear memcpy
+    seen = np.empty(0, np.int64)
+    filled = 0
+    stalled = 0
+    grow = 1        # oversample factor; doubles when a round finds nothing
+                    # fresh (coupon-collector tail near pool exhaustion)
+    while filled < n_pairs:
+        m = min(max(2 * (n_pairs - filled) * grow, 64), 1 << 22)
+        ca = rng.randint(0, n, size=m)
+        cb = rng.randint(0, n, size=m)
+        same = labels[ca] == labels[cb]
+        keep = (same if want_same else ~same) & (ca != cb)
+        ca, cb = ca[keep], cb[keep]
+        if dedup and len(ca):
+            key = np.minimum(ca, cb) * n + np.maximum(ca, cb)
+            _, first = np.unique(key, return_index=True)
+            first.sort()               # keep draw order (determinism)
+            ca, cb, key = ca[first], cb[first], key[first]
+            pos = np.searchsorted(seen, key)
+            found = np.zeros(len(key), bool)
+            inside = pos < len(seen)
+            found[inside] = seen[pos[inside]] == key[inside]
+            ca, cb, key = ca[~found], cb[~found], key[~found]
+            take = min(len(ca), n_pairs - filled)
+            new = np.sort(key[:take])
+            seen = np.insert(seen, np.searchsorted(seen, new), new)
+        k = min(len(ca), n_pairs - filled)
+        a[filled:filled + k] = ca[:k]
+        b[filled:filled + k] = cb[:k]
+        filled += k
+        if k == 0:
+            stalled += 1
+            grow = min(grow * 2, 1 << 16)
+        else:
+            stalled = 0
+        if stalled >= 64:
+            raise ValueError(
+                f"could not draw {n_pairs} distinct "
+                f"{'similar' if want_same else 'dissimilar'} pairs from "
+                f"{n} rows (only {filled} exist under the labeling)")
+    return a, b
+
+
 def sample_pairs(features: np.ndarray, labels: np.ndarray, n_similar: int,
-                 n_dissimilar: int, seed: int = 0):
+                 n_dissimilar: int, seed: int = 0, dedup: bool = True):
     """Sample S and D as in the paper: same class -> similar, else dissimilar.
 
     Returns dict(xs, ys, sim) with xs/ys (n_s+n_d, d), sim in {1, 0}.
+    Self-pairs are masked and (with ``dedup``) each unordered constraint
+    appears at most once per set.
     """
     rng = np.random.RandomState(seed)
-    n = features.shape[0]
-
-    def draw(n_pairs, want_same):
-        a = np.empty(n_pairs, np.int64)
-        b = np.empty(n_pairs, np.int64)
-        filled = 0
-        while filled < n_pairs:
-            cand_a = rng.randint(0, n, size=2 * (n_pairs - filled))
-            cand_b = rng.randint(0, n, size=2 * (n_pairs - filled))
-            same = labels[cand_a] == labels[cand_b]
-            keep = same if want_same else ~same
-            keep &= cand_a != cand_b
-            k = min(keep.sum(), n_pairs - filled)
-            a[filled:filled + k] = cand_a[keep][:k]
-            b[filled:filled + k] = cand_b[keep][:k]
-            filled += k
-        return a, b
-
-    sa, sb = draw(n_similar, True)
-    da, db = draw(n_dissimilar, False)
+    sa, sb = _draw_pair_indices(rng, labels, n_similar, True, dedup)
+    da, db = _draw_pair_indices(rng, labels, n_dissimilar, False, dedup)
     xs = np.concatenate([features[sa], features[da]], axis=0)
     ys = np.concatenate([features[sb], features[db]], axis=0)
     sim = np.concatenate([np.ones(n_similar, np.int32),
@@ -111,32 +154,18 @@ def sample_pairs(features: np.ndarray, labels: np.ndarray, n_similar: int,
 
 
 def sample_pair_indices(labels: np.ndarray, n_similar: int,
-                        n_dissimilar: int, seed: int = 0):
+                        n_dissimilar: int, seed: int = 0,
+                        dedup: bool = True):
     """Index-only pair sampling: returns dict(a, b, sim) of int arrays.
 
     O(n_pairs) memory instead of O(n_pairs * d) — at web scale (the paper's
     200M pairs) pairs are always stored as indices into the feature store.
+    Self-pairs are masked and (with ``dedup``) each unordered constraint
+    appears at most once per set.
     """
     rng = np.random.RandomState(seed)
-    n = labels.shape[0]
-
-    def draw(n_pairs, want_same):
-        a = np.empty(n_pairs, np.int64)
-        b = np.empty(n_pairs, np.int64)
-        filled = 0
-        while filled < n_pairs:
-            ca = rng.randint(0, n, size=2 * (n_pairs - filled))
-            cb = rng.randint(0, n, size=2 * (n_pairs - filled))
-            same = labels[ca] == labels[cb]
-            keep = (same if want_same else ~same) & (ca != cb)
-            k = min(keep.sum(), n_pairs - filled)
-            a[filled:filled + k] = ca[keep][:k]
-            b[filled:filled + k] = cb[keep][:k]
-            filled += k
-        return a, b
-
-    sa, sb = draw(n_similar, True)
-    da, db = draw(n_dissimilar, False)
+    sa, sb = _draw_pair_indices(rng, labels, n_similar, True, dedup)
+    da, db = _draw_pair_indices(rng, labels, n_dissimilar, False, dedup)
     a = np.concatenate([sa, da])
     b = np.concatenate([sb, db])
     sim = np.concatenate([np.ones(n_similar, np.int32),
@@ -145,10 +174,26 @@ def sample_pair_indices(labels: np.ndarray, n_similar: int,
     return {"a": a[perm], "b": b[perm], "sim": sim[perm]}
 
 
+def distinct_draws(rng, n_pool: int, size: int) -> np.ndarray:
+    """``size`` distinct uniform draws from range(n_pool), O(size) expected
+    when size << n_pool (rng.choice(replace=False) permutes the whole pool,
+    which at the paper's 200M-pair scale is O(pool) per batch). Falls back
+    to replacement draws only when the pool is smaller than the batch."""
+    if size > n_pool:
+        return rng.randint(0, n_pool, size)
+    if 4 * size >= n_pool:              # dense: permutation is cheapest
+        return rng.permutation(n_pool)[:size]
+    out = np.unique(rng.randint(0, n_pool, size))
+    while len(out) < size:
+        out = np.union1d(out, rng.randint(0, n_pool, 2 * (size - len(out))))
+    return out[rng.permutation(len(out))[:size]]
+
+
 def pair_batches_from_indices(features: np.ndarray, idx_pairs: dict,
                               batch_size: int, seed: int = 0,
                               balanced: bool = True) -> Iterator[dict]:
-    """Minibatch stream gathering features on the fly (memory-bounded)."""
+    """Minibatch stream gathering features on the fly (memory-bounded).
+    Constraints within a batch are distinct (no duplicated pair rows)."""
     rng = np.random.RandomState(seed)
     sim_idx = np.nonzero(idx_pairs["sim"] == 1)[0]
     dis_idx = np.nonzero(idx_pairs["sim"] == 0)[0]
@@ -157,10 +202,11 @@ def pair_batches_from_indices(features: np.ndarray, idx_pairs: dict,
         if balanced and len(sim_idx) and len(dis_idx):
             h = batch_size // 2
             sel = np.concatenate([
-                sim_idx[rng.randint(0, len(sim_idx), h)],
-                dis_idx[rng.randint(0, len(dis_idx), batch_size - h)]])
+                sim_idx[distinct_draws(rng, len(sim_idx), h)],
+                dis_idx[distinct_draws(rng, len(dis_idx),
+                                        batch_size - h)]])
         else:
-            sel = rng.randint(0, n, batch_size)
+            sel = distinct_draws(rng, n, batch_size)
         yield {
             "xs": jnp.asarray(features[idx_pairs["a"][sel]]),
             "ys": jnp.asarray(features[idx_pairs["b"][sel]]),
@@ -171,7 +217,8 @@ def pair_batches_from_indices(features: np.ndarray, idx_pairs: dict,
 def pair_batches(pairs: dict, batch_size: int, seed: int = 0,
                  balanced: bool = True) -> Iterator[dict]:
     """Infinite minibatch stream. ``balanced`` draws half S / half D per batch
-    as in the paper's experimental setup (§5.2)."""
+    as in the paper's experimental setup (§5.2). Constraints within a batch
+    are distinct (no duplicated pair rows)."""
     rng = np.random.RandomState(seed)
     sim_idx = np.nonzero(pairs["sim"] == 1)[0]
     dis_idx = np.nonzero(pairs["sim"] == 0)[0]
@@ -180,10 +227,11 @@ def pair_batches(pairs: dict, batch_size: int, seed: int = 0,
         if balanced and len(sim_idx) and len(dis_idx):
             h = batch_size // 2
             idx = np.concatenate([
-                sim_idx[rng.randint(0, len(sim_idx), h)],
-                dis_idx[rng.randint(0, len(dis_idx), batch_size - h)]])
+                sim_idx[distinct_draws(rng, len(sim_idx), h)],
+                dis_idx[distinct_draws(rng, len(dis_idx),
+                                        batch_size - h)]])
         else:
-            idx = rng.randint(0, n, batch_size)
+            idx = distinct_draws(rng, n, batch_size)
         yield {k: jnp.asarray(v[idx]) for k, v in pairs.items()}
 
 

@@ -28,7 +28,10 @@ counters. ``--snapshot-dir`` restarts without re-projecting: if the
 directory holds a snapshot it is loaded (the manifest's L fingerprint is
 checked against this run's metric), otherwise the freshly built index is
 saved there. ``--warmup-ks`` pre-compiles extra k values so non-default
-``k_top`` requests don't pay first-request jit.
+``k_top`` requests don't pay first-request jit. ``--mine N`` runs a
+``HardPairMiner`` sweep for N anchors against the live engine after the
+traffic run — mining shares the engine's jit cache/warmup and its QPS
+shows up in the same ``stats()`` counters as serving traffic.
 
 With --data > 1 the gallery shards over a forced-host-device mesh
 (dry-run style) to exercise the sharded query path (both index kinds;
@@ -87,6 +90,11 @@ def main():
     ap.add_argument("--warmup-ks", default=None,
                     help="comma-separated extra k values to pre-compile "
                          "(e.g. 5,20); --k is always included")
+    ap.add_argument("--mine", type=int, default=0,
+                    help="after the traffic run, mine hard pairs for "
+                         "this many anchors against the live serving "
+                         "engine (shares its jit cache and stats) and "
+                         "report yield + mining QPS")
     ap.add_argument("--data", type=int, default=1,
                     help=">1 forces that many host devices and shards "
                          "the gallery over the data axis")
@@ -226,6 +234,23 @@ def main():
           f"({st['cache_entries']} entries)")
     print(f"neighbor class purity@{args.k}: {np.mean(purity):.3f} "
           f"(chance {1.0 / args.n_classes:.3f})")
+
+    # --- hard-pair mining against the live engine ------------------------
+    if args.mine > 0:
+        from repro.mining import HardPairMiner, MinerConfig
+        miner = HardPairMiner(
+            engine, feats, labels,
+            MinerConfig(k_neighbors=max(args.k, 5)))
+        res = miner.mine(n_queries=args.mine, seed=2)
+        ms = res.stats
+        print(f"mining: {ms['n_pairs']} hard pairs from "
+              f"{ms['n_queries']} anchors (neg yield "
+              f"{ms['neg_yield']:.2f}/q, pos yield "
+              f"{ms['pos_yield']:.2f}/q, {ms['n_semi_hard']} semi-hard, "
+              f"{ms['n_fallback_neg']} fallback) in "
+              f"{ms['mine_busy_s']:.2f}s device time — engine now at "
+              f"{ms['engine_qps']:.0f} qps over "
+              f"{engine.stats()['n_device_queries']} device queries")
 
     # --- mutation lifecycle demo -----------------------------------------
     if args.mutable and args.churn > 0 and isinstance(index, MutableIndex):

@@ -1,0 +1,18 @@
+"""Closed-loop hard-pair mining: the serving index feeds the trainer.
+
+miner.py   HardPairMiner — batched k-NN through the RetrievalEngine,
+           label-filtered into hard negatives / hard positives / a
+           semi-hard band under the current metric L.
+stream.py  MinedPairSource — trainer-contract batch streams mixing
+           uniform and mined pairs under a CurriculumSchedule, per-worker
+           sharded.
+loop.py    ClosedLoopTrainer — alternates PS training with index refresh
+           (MutableIndex.swap_metric or rebuild) + re-mining, under an
+           explicit staleness policy (every R steps / on plateau).
+"""
+
+from repro.mining.loop import ClosedLoopConfig, ClosedLoopTrainer  # noqa: F401
+from repro.mining.miner import (HardPairMiner, MinerConfig,  # noqa: F401
+                                MiningResult)
+from repro.mining.stream import (CurriculumSchedule,  # noqa: F401
+                                 MinedPairSource)

@@ -116,3 +116,71 @@ class TestTrainingImprovesMetric:
             dml.pair_scores_euclidean(xs, ys), labels))
         assert hist[-1]["loss"] < hist[0]["loss"]
         assert ap_learned > ap_euclid + 0.02
+
+
+class TestPairSampling:
+    """data/pairs.py dedup satellite: self-pairs are masked, duplicate
+    constraints are dropped, and seeded draws are deterministic."""
+
+    def _labels(self, n=500, c=7, seed=0):
+        return np.random.RandomState(seed).randint(0, c, n).astype(np.int32)
+
+    def test_no_self_pairs_and_no_duplicates(self):
+        y = self._labels()
+        idx = pairdata.sample_pair_indices(y, 800, 800, seed=0)
+        assert (idx["a"] != idx["b"]).all()
+        # unordered (a, b) constraints are unique within each of S and D
+        for want in (1, 0):
+            m = idx["sim"] == want
+            lo = np.minimum(idx["a"][m], idx["b"][m])
+            hi = np.maximum(idx["a"][m], idx["b"][m])
+            keys = lo * len(y) + hi
+            assert len(np.unique(keys)) == len(keys)
+
+    def test_labels_respected(self):
+        y = self._labels()
+        idx = pairdata.sample_pair_indices(y, 400, 400, seed=1)
+        sim = idx["sim"] == 1
+        assert (y[idx["a"][sim]] == y[idx["b"][sim]]).all()
+        assert (y[idx["a"][~sim]] != y[idx["b"][~sim]]).all()
+
+    def test_seeded_determinism(self):
+        y = self._labels()
+        i1 = pairdata.sample_pair_indices(y, 500, 500, seed=42)
+        i2 = pairdata.sample_pair_indices(y, 500, 500, seed=42)
+        for k in ("a", "b", "sim"):
+            np.testing.assert_array_equal(i1[k], i2[k])
+        i3 = pairdata.sample_pair_indices(y, 500, 500, seed=43)
+        assert not np.array_equal(i1["a"], i3["a"])
+
+    def test_sample_pairs_matches_contract(self):
+        rng = np.random.RandomState(0)
+        x = rng.randn(300, 8).astype(np.float32)
+        y = self._labels(300, 5)
+        pairs = pairdata.sample_pairs(x, y, 200, 200, seed=2)
+        assert pairs["xs"].shape == (400, 8)
+        assert pairs["sim"].sum() == 200
+        # no self-pair can produce an identical feature row pair here
+        assert (np.abs(pairs["xs"] - pairs["ys"]).sum(1) > 0).all()
+
+    def test_exhaustion_raises(self):
+        y = np.zeros(8, np.int32)       # one class: max C(8,2)=28 pairs
+        with pytest.raises(ValueError, match="distinct"):
+            pairdata.sample_pair_indices(y, 29, 0, seed=0)
+
+    def test_near_exhaustion_fills(self):
+        y = np.zeros(10, np.int32)      # exactly C(10,2)=45 similar pairs
+        idx = pairdata.sample_pair_indices(y, 45, 0, seed=0)
+        lo = np.minimum(idx["a"], idx["b"])
+        hi = np.maximum(idx["a"], idx["b"])
+        assert len(np.unique(lo * 10 + hi)) == 45
+
+    def test_batches_have_distinct_constraints(self):
+        y = self._labels(400, 6)
+        idx = pairdata.sample_pair_indices(y, 600, 600, seed=0)
+        stream = pairdata.pair_batches(
+            {"a": idx["a"], "b": idx["b"], "sim": idx["sim"]},
+            batch_size=128, seed=0, balanced=False)
+        batch = next(stream)
+        keys = np.asarray(batch["a"]) * 400 + np.asarray(batch["b"])
+        assert len(np.unique(keys)) == len(keys)

@@ -37,6 +37,29 @@ class TestKNN:
         assert acc_l > acc_e + 0.1, (acc_l, acc_e)
         assert acc_l > 0.8
 
+    def test_topk_selection_matches_full_argsort(self):
+        """Regression: knn_classify uses lax.top_k (k-selection) instead
+        of a full argsort over the (n_test, n_train) distance matrix —
+        the neighbor sets and predictions must agree with the old path."""
+        from repro.kernels.pairwise_dist import metric_sqdist_matrix
+        rng = np.random.RandomState(3)
+        train_x = rng.randn(160, 24).astype(np.float32)
+        train_y = rng.randint(0, 5, 160).astype(np.int32)
+        test_x = rng.randn(48, 24).astype(np.float32)
+        L = 0.4 * rng.randn(12, 24).astype(np.float32)
+        for k in (1, 5, 16):
+            D = metric_sqdist_matrix(L, jnp.asarray(test_x),
+                                     jnp.asarray(train_x))
+            nn_old = np.asarray(jnp.argsort(D, axis=1)[:, :k])
+            _, nn_new = jax.lax.top_k(-D, k)
+            np.testing.assert_array_equal(np.asarray(nn_new), nn_old)
+            pred = eval_tasks.knn_classify(L, train_x, train_y, test_x,
+                                           k=k)
+            votes = train_y[nn_old]
+            expect = np.array([np.argmax(np.bincount(v, minlength=5))
+                               for v in votes])
+            np.testing.assert_array_equal(np.asarray(pred), expect)
+
     def test_knn_perfect_on_separated_data(self):
         rng = np.random.RandomState(0)
         centers = 10 * rng.randn(3, 8)
