@@ -13,6 +13,9 @@ after each section's own output.
              exact rerank)
   gallery_churn -> serving: QPS + recall@10 under sustained upsert/delete
              churn with periodic compaction (MutableIndex)
+  serving_load -> serving: SLO attainment under a calibrated overload
+             burst — adaptive degradation vs the non-degrading baseline
+             (RequestScheduler; emits BENCH_serving.json)
   mining_convergence -> closed loop: mined+curriculum training matches
              uniform sampling's final kNN accuracy in <= 0.5x the steps
              at equal batch size (HardPairMiner -> MinedPairSource ->
@@ -43,12 +46,14 @@ def main() -> None:
     from benchmarks import (ablation_sync, fig2_convergence, fig3_speedup,
                             fig4_quality, gallery_churn,
                             mining_convergence, retrieval_qps,
-                            retrieval_recall, roofline, table1_datasets)
+                            retrieval_recall, roofline, serving_load,
+                            table1_datasets)
 
     section("table1_datasets", table1_datasets.main)
     section("retrieval_qps", retrieval_qps.main)
     section("retrieval_recall", retrieval_recall.main)
     section("gallery_churn", gallery_churn.main)
+    section("serving_load", serving_load.main)
     section("mining_convergence", mining_convergence.main)
     section("fig4_quality", fig4_quality.main)
     section("fig2_convergence", fig2_convergence.main)

@@ -1,0 +1,358 @@
+"""Traffic-shaped serving under overload: SLO attainment with and without
+adaptive degradation.
+
+The scheduler's pitch is that under a burst the system should *get
+cheaper, not slower*. This benchmark makes that claim falsifiable. It
+drives the identical open-loop arrival trace — Poisson warm/drain phases
+around a burst, Zipf-skewed query popularity, a 70/20/10 interactive /
+batch / mining class mix — through two fronts over the same IVF index:
+
+  * **baseline**  — ``RequestScheduler(degrade=False)``: admission control
+    and deadlines only, every batch at full build-time quality;
+  * **adaptive**  — the same scheduler with the ``LoadController`` stepping
+    the nprobe ladder down under sustained queue pressure and back up on
+    drain.
+
+The burst rate is **auto-calibrated**, not hard-coded: we measure the
+engine's full-quality and fully-degraded batch service times on this
+machine and set the burst between the two capacities (2.5x the
+full-quality capacity, capped at half the degraded one). The baseline
+therefore *cannot* keep up by construction, while the adaptive front has
+provable headroom — the pinned claims stay machine-independent.
+
+Per run/class the benchmark prints ``serving,<run>,<class>,<offered>,
+<completed>,<expired>,<rejected>,<attainment>,<p50_ms>,<p99_ms>`` CSV
+lines, and writes ``BENCH_serving.json`` (calibration + per-run p50/p99/
+QPS/attainment) so the serving perf trajectory accrues across commits.
+
+Pinned claims (CI runs ``--smoke`` on every push):
+
+  * effective p99 (expired/rejected count as +inf) of the interactive
+    class: adaptive <= its deadline, baseline > it — the SLO the baseline
+    misses is held by degradation;
+  * adaptive interactive SLO attainment >= 0.9; baseline <= 0.75;
+  * the controller both degraded and restored (the ladder round-trips);
+  * recall@10 of every served interactive answer vs the exact scan
+    >= 0.85 — degraded is cheaper, not wrong;
+  * zero silent drops: in both runs every submitted request is accounted
+    for as completed, expired, rejected, or failed — by the scheduler's
+    own monotone counters.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from concurrent.futures import wait
+
+import numpy as np
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MIX = (("interactive", 0.7), ("batch", 0.2), ("mining", 0.1))
+RATE_CAP = 3500.0           # open-loop replay ceiling (submits/s)
+MISS_S = 60.0               # finite SLO-miss sentinel (percentile-safe)
+
+
+def _zipf_pool(rng, centers, pool_size, alpha=1.05):
+    """Query pool + Zipf popularity over it (hot head, long tail)."""
+    n_blobs, d = centers.shape
+    pool = (centers[rng.randint(0, n_blobs, pool_size)]
+            + 0.3 * rng.randn(pool_size, d)).astype(np.float32)
+    w = 1.0 / np.arange(1, pool_size + 1) ** alpha
+    return pool, w / w.sum()
+
+
+def _make_trace(rng, qps_warm, qps_burst, t_warm, t_burst, t_drain, pop):
+    """Open-loop arrivals: (t, class, query_id) — Poisson gaps inside each
+    phase, the burst phase jumping to the calibrated overload rate."""
+    trace, t = [], 0.0
+    names = [n for n, _ in MIX]
+    probs = [p for _, p in MIX]
+    for rate, dur in ((qps_warm, t_warm), (qps_burst, t_burst),
+                      (qps_warm, t_drain)):
+        end = t + dur
+        while True:
+            t += rng.exponential(1.0 / rate)
+            if t >= end:
+                t = end
+                break
+            trace.append((t, names[rng.choice(len(names), p=probs)],
+                          int(rng.choice(len(pop), p=pop))))
+    return trace
+
+
+def _svc_time(cal_eng, batch, knobs, iters=4):
+    cal_eng.search(batch, **knobs)              # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        cal_eng.search(batch, **knobs)
+    return (time.perf_counter() - t0) / iters
+
+
+def _replay(sched, trace, pool, deadlines):
+    """Submit the trace against the wall clock; returns one record per
+    offered request (rejected submits included — nothing is dropped from
+    the accounting)."""
+    from repro.serve import RejectedError
+
+    records = []
+    start = time.perf_counter() + 0.02
+    for t_arr, cls_name, qid in trace:
+        lag = (start + t_arr) - time.perf_counter()
+        if lag > 1e-4:                          # skip sub-0.1ms sleeps
+            time.sleep(lag)
+        rec = {"cls": cls_name, "qid": qid, "t_sub": time.perf_counter(),
+               "fut": None, "t_done": None}
+        try:
+            fut = sched.submit(pool[qid], priority=cls_name,
+                               deadline_s=deadlines[cls_name])
+        except RejectedError:
+            records.append(rec)
+            continue
+        rec["fut"] = fut
+        fut.add_done_callback(
+            lambda f, r=rec: r.__setitem__("t_done", time.perf_counter()))
+        records.append(rec)
+    return records
+
+
+def _score(records, deadlines):
+    """Per-class outcome counts + latency stats; effective p99 counts
+    expired/rejected/failed as a 60s miss sentinel (an SLO miss is a
+    miss, and a finite one keeps percentiles well-defined)."""
+    from repro.serve import DeadlineExceededError
+
+    out = {}
+    for cls_name in (n for n, _ in MIX):
+        recs = [r for r in records if r["cls"] == cls_name]
+        lat, counts = [], {"offered": len(recs), "completed": 0,
+                          "expired": 0, "rejected": 0, "failed": 0}
+        eff = []
+        for r in recs:
+            if r["fut"] is None:
+                counts["rejected"] += 1
+                eff.append(MISS_S)
+                continue
+            exc = r["fut"].exception(timeout=0)
+            if exc is None:
+                counts["completed"] += 1
+                lat.append(r["t_done"] - r["t_sub"])
+                eff.append(lat[-1])
+            elif isinstance(exc, DeadlineExceededError):
+                counts["expired"] += 1
+                eff.append(MISS_S)
+            else:
+                counts["failed"] += 1
+                eff.append(MISS_S)
+        dl = deadlines[cls_name]
+        ok = sum(1 for v in eff if v <= dl)
+        counts["attainment"] = ok / max(1, len(recs))
+        counts["p50_ms"] = (float(np.percentile(lat, 50)) * 1e3
+                            if lat else float("nan"))
+        counts["p99_ms"] = (float(np.percentile(lat, 99)) * 1e3
+                            if lat else float("nan"))
+        counts["p99_eff_ms"] = (float(np.percentile(eff, 99)) * 1e3
+                                if eff else float("nan"))
+        out[cls_name] = counts
+    return out
+
+
+def main(smoke: bool = False, out: str | None = None):
+    import jax.numpy as jnp
+
+    from repro.serve import (ExactIndex, IVFIndex, RequestScheduler,
+                             RetrievalEngine, recall_at_k)
+
+    if smoke:   # CI-sized: tens of seconds, same code paths + claims
+        M, D, KPROJ, C, NPROBE = 32_000, 48, 24, 64, 64
+        POOL, T_WARM, T_BURST, T_DRAIN = 4096, 0.3, 1.2, 1.0
+    else:
+        M, D, KPROJ, C, NPROBE = 60_000, 64, 32, 64, 64
+        POOL, T_WARM, T_BURST, T_DRAIN = 8192, 0.5, 3.0, 1.5
+    KTOP, BATCH, BUCKETS = 10, 32, (8, 32)
+    LADDER = ({}, {"nprobe": 8}, {"nprobe": 2})
+
+    rng = np.random.RandomState(0)
+    centers = 3.0 * rng.randn(C, D).astype(np.float32)
+    gallery = (centers[rng.randint(0, C, M)]
+               + 0.3 * rng.randn(M, D)).astype(np.float32)
+    L = 0.2 * rng.randn(KPROJ, D).astype(np.float32)
+
+    t0 = time.perf_counter()
+    index = IVFIndex.build(L, gallery, n_clusters=C, nprobe=NPROBE,
+                           cap_factor=1.25)
+    print(f"ivf over {M} rows ({C} clusters, cap {index.cap}, nprobe "
+          f"{NPROBE}) built in {time.perf_counter() - t0:.2f}s")
+    pool, pop = _zipf_pool(rng, centers, POOL)
+
+    # -- calibrate this machine (cache off: raw device-path service time)
+    cal = RetrievalEngine(index, k_top=KTOP, buckets=BUCKETS, cache_size=0)
+    qcal = jnp.asarray(pool[rng.randint(0, POOL, BATCH)])
+    t_full = _svc_time(cal, qcal, LADDER[0])
+    t_deg = _svc_time(cal, qcal, LADDER[-1])
+    qps_full, qps_deg = BATCH / t_full, BATCH / t_deg
+    headroom = qps_deg / qps_full
+    assert headroom >= 3.0, (
+        f"ladder headroom {headroom:.1f}x < 3x on this machine — the "
+        f"degraded path is not meaningfully cheaper; benchmark invalid")
+    qps_burst = min(2.5 * qps_full, 0.5 * qps_deg, RATE_CAP)
+    assert qps_burst >= 1.7 * qps_full, (
+        f"burst rate {qps_burst:.0f}/s < 1.7x full-quality capacity "
+        f"{qps_full:.0f}/s — overload not reachable; benchmark invalid")
+    qps_warm = 0.25 * qps_full
+    dl_i = max(0.12, min(0.7, 12.0 * t_full))
+    deadlines = {"interactive": dl_i, "batch": 4 * dl_i,
+                 "mining": 10 * dl_i}
+    print(f"calibration: batch svc full {t_full * 1e3:.1f}ms / degraded "
+          f"{t_deg * 1e3:.1f}ms -> capacity {qps_full:.0f} vs "
+          f"{qps_deg:.0f} q/s ({headroom:.1f}x headroom); burst "
+          f"{qps_burst:.0f} q/s, interactive deadline {dl_i * 1e3:.0f}ms")
+
+    trace = _make_trace(rng, qps_warm, qps_burst, T_WARM, T_BURST,
+                        T_DRAIN, pop)
+    print(f"trace: {len(trace)} arrivals over "
+          f"{T_WARM + T_BURST + T_DRAIN:.1f}s")
+
+    def run(label, degrade):
+        from repro.serve import PriorityClass
+        eng = RetrievalEngine(index, k_top=KTOP, buckets=BUCKETS)
+        # generous queue caps: this benchmark's SLO story is deadlines +
+        # degradation (admission-control behavior is pinned by the unit
+        # and property tests); a tight cap would just convert the ramp
+        # backlog into rejections before the controller can react
+        classes = tuple(
+            PriorityClass(name, prio, deadlines[name], 8192)
+            for prio, (name, _) in enumerate(MIX))
+        sched = RequestScheduler(
+            eng, classes=classes, max_batch=BATCH, max_wait_ms=2.0,
+            degrade=degrade, ladder=LADDER if degrade else None,
+            high_watermark=BATCH, low_watermark=8,
+            degrade_window_s=0.02, restore_window_s=0.25)
+        sched.warmup()
+        t_run0 = time.perf_counter()
+        records = _replay(sched, trace, pool, deadlines)
+        futs = [r["fut"] for r in records if r["fut"] is not None]
+        wait(futs, timeout=120)
+        assert sched.close(timeout=60), f"{label}: workers never exited"
+        elapsed = time.perf_counter() - t_run0
+        score = _score(records, deadlines)
+
+        # zero silent drops: the scheduler's own counters account for
+        # every offered request, and every admitted future resolved
+        obs = sched.observability()
+        assert all(r["fut"].done() for r in records if r["fut"]), \
+            f"{label}: unresolved futures after close"
+        for cls_name, s in score.items():
+            c = obs["classes"][cls_name]
+            assert c["admitted"] == (c["completed"] + c["expired"]
+                                     + c["failed"] + c["cancelled"]), \
+                f"{label}/{cls_name}: admitted requests unaccounted for"
+            assert s["offered"] == c["admitted"] + s["rejected"], \
+                f"{label}/{cls_name}: offered != admitted + rejected"
+            assert s["failed"] == 0, \
+                f"{label}/{cls_name}: {s['failed']} engine failures"
+            print(f"serving,{label},{cls_name},{s['offered']},"
+                  f"{s['completed']},{s['expired']},{s['rejected']},"
+                  f"{s['attainment']:.3f},{s['p50_ms']:.1f},"
+                  f"{s['p99_ms']:.1f}")
+        done = sum(s["completed"] for s in score.values())
+        ctrl = sched.controller
+        return {
+            "classes": score,
+            "qps_completed": done / elapsed,
+            "transitions": ([] if ctrl is None else
+                            [(tr.level_from, tr.level_to)
+                             for tr in ctrl.transitions]),
+            "records": records,
+        }
+
+    def gate():
+        """One full baseline-vs-adaptive comparison + the pinned claims;
+        raises AssertionError when a claim fails."""
+        print("\nserving,run,class,offered,completed,expired,rejected,"
+              "attainment,p50_ms,p99_ms")
+        base = run("baseline", degrade=False)
+        adap = run("adaptive", degrade=True)
+
+        # recall of served interactive answers vs the exact scan
+        served = [(r["qid"], r["fut"].result(timeout=0)[1])
+                  for r in adap["records"]
+                  if r["cls"] == "interactive" and r["fut"] is not None
+                  and r["fut"].exception(timeout=0) is None]
+        exact = ExactIndex.build(L, gallery)
+        qids = sorted({qid for qid, _ in served})
+        truth = {}
+        for lo in range(0, len(qids), 256):
+            chunk = qids[lo:lo + 256]
+            _, ids_e = exact.topk(jnp.asarray(pool[chunk]), KTOP)
+            truth.update(zip(chunk, np.asarray(ids_e)))
+        rec10 = float(recall_at_k(
+            np.stack([ids for _, ids in served]),
+            np.stack([truth[qid] for qid, _ in served])))
+
+        bi = base["classes"]["interactive"]
+        ai = adap["classes"]["interactive"]
+        print(f"\ninteractive SLO ({dl_i * 1e3:.0f}ms): baseline "
+              f"attainment {bi['attainment']:.3f} (p99_eff "
+              f"{bi['p99_eff_ms']:.0f}ms) vs adaptive "
+              f"{ai['attainment']:.3f} (p99_eff {ai['p99_eff_ms']:.0f}ms)")
+        print(f"adaptive ladder transitions: {adap['transitions']}; "
+              f"recall@10 of served interactive answers: {rec10:.3f}")
+
+        assert ai["p99_eff_ms"] <= dl_i * 1e3, \
+            "adaptive missed the interactive SLO"
+        assert bi["p99_eff_ms"] > dl_i * 1e3, \
+            "baseline held the SLO — the burst never overloaded it"
+        assert ai["attainment"] >= 0.9, \
+            f"adaptive attainment {ai['attainment']:.3f} < 0.9"
+        assert bi["attainment"] <= 0.75, \
+            f"baseline attainment {bi['attainment']:.3f} > 0.75"
+        downs = [t for t in adap["transitions"] if t[1] > t[0]]
+        ups = [t for t in adap["transitions"] if t[1] < t[0]]
+        assert downs and ups, \
+            f"ladder never round-tripped: {adap['transitions']}"
+        assert rec10 >= 0.85, f"served recall@10 {rec10:.3f} < 0.85"
+        return base, adap, rec10
+
+    # a real-time load test on a shared runner gets one retry: a single
+    # scheduling hiccup during the ~100ms degrade ramp can push >1% of a
+    # run past the deadline without saying anything about the scheduler
+    try:
+        base, adap, rec10 = gate()
+    except AssertionError as e:
+        print(f"SLO gate failed ({e}); retrying once — transient "
+              f"machine noise vs real regression")
+        base, adap, rec10 = gate()
+
+    out = out or os.path.join(REPO, "BENCH_serving.json")
+    payload = {
+        "bench": "serving_load", "smoke": smoke,
+        "params": {"M": M, "D": D, "k_proj": KPROJ, "n_clusters": C,
+                   "nprobe": NPROBE, "k_top": KTOP, "max_batch": BATCH,
+                   "ladder": [dict(lv) for lv in LADDER]},
+        "calibration": {"t_full_ms": t_full * 1e3, "t_deg_ms": t_deg * 1e3,
+                        "qps_full": qps_full, "qps_deg": qps_deg,
+                        "headroom": headroom, "qps_burst": qps_burst,
+                        "deadline_interactive_ms": dl_i * 1e3},
+        "runs": {label: {"qps_completed": r["qps_completed"],
+                         "transitions": r["transitions"],
+                         "classes": r["classes"]}
+                 for label, r in (("baseline", base), ("adaptive", adap))},
+        "recall_at_10_served": rec10,
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (tens of seconds)")
+    ap.add_argument("--out", default=None,
+                    help="BENCH json path (default: repo root)")
+    a = ap.parse_args()
+    main(smoke=a.smoke, out=a.out)

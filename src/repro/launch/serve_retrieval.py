@@ -33,6 +33,16 @@ saved there. ``--warmup-ks`` pre-compiles extra k values so non-default
 traffic run — mining shares the engine's jit cache/warmup and its QPS
 shows up in the same ``stats()`` counters as serving traffic.
 
+``--scheduler`` swaps the MicroBatcher front door for the traffic-shaped
+``RequestScheduler``: traffic is submitted under a 70/20/10 interactive /
+batch / mining class mix with per-class deadlines (``--deadline-ms``
+overrides), bounded admission queues, and (unless ``--no-degrade``) the
+adaptive quality ladder derived from the index's own knobs —
+``--high/--low-watermark`` and ``--degrade/--restore-window-ms`` tune the
+load controller's hysteresis. The run then reports per-class
+counters/latency percentiles and the degradation transitions alongside
+the usual engine stats.
+
 With --data > 1 the gallery shards over a forced-host-device mesh
 (dry-run style) to exercise the sharded query path (both index kinds;
 incompatible with --mutable / --snapshot-dir, which are single-shard).
@@ -98,6 +108,29 @@ def main():
     ap.add_argument("--data", type=int, default=1,
                     help=">1 forces that many host devices and shards "
                          "the gallery over the data axis")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="serve through the traffic-shaped "
+                         "RequestScheduler (priority classes, deadlines, "
+                         "adaptive degradation) instead of the plain "
+                         "MicroBatcher")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="scheduler: per-request deadline override in ms "
+                         "(default: each class's own deadline)")
+    ap.add_argument("--no-degrade", action="store_true",
+                    help="scheduler: disable the adaptive quality ladder "
+                         "(admission control + deadlines only)")
+    ap.add_argument("--high-watermark", type=int, default=32,
+                    help="scheduler: queue depth that starts the "
+                         "degrade window")
+    ap.add_argument("--low-watermark", type=int, default=4,
+                    help="scheduler: queue depth that starts the "
+                         "restore window")
+    ap.add_argument("--degrade-window-ms", type=float, default=50.0,
+                    help="scheduler: sustained pressure before stepping "
+                         "the ladder down")
+    ap.add_argument("--restore-window-ms", type=float, default=500.0,
+                    help="scheduler: sustained drain before stepping "
+                         "back up")
     args = ap.parse_args()
     if args.index in ("ivf", "ivfpq") and args.backend == "pallas":
         ap.error(f"--index {args.index} only supports --backend xla (the "
@@ -125,8 +158,9 @@ def main():
     from repro.data import pairs as pairdata
     from repro.launch.mesh import make_local_mesh
     from repro.serve import (ExactIndex, IVFIndex, IVFPQIndex,
-                             MicroBatcher, MutableIndex, RetrievalEngine,
-                             has_snapshot, load_index, save_index)
+                             MicroBatcher, MutableIndex, RequestScheduler,
+                             RetrievalEngine, SchedulerError, has_snapshot,
+                             load_index, save_index)
 
     # --- data + metric ---------------------------------------------------
     cfg = pairdata.PairDatasetConfig(
@@ -196,20 +230,51 @@ def main():
               f"{ivf.compression_ratio:.1f}x), rerank depth "
               f"{ivf.rerank_depth}, store={ivf.store}")
 
-    batcher = MicroBatcher(engine, max_batch=args.max_batch,
-                           max_wait_ms=args.max_wait_ms)
+    if args.scheduler:
+        front = RequestScheduler(
+            engine, max_batch=args.max_batch,
+            max_wait_ms=args.max_wait_ms, degrade=not args.no_degrade,
+            high_watermark=args.high_watermark,
+            low_watermark=args.low_watermark,
+            degrade_window_s=args.degrade_window_ms / 1e3,
+            restore_window_s=args.restore_window_ms / 1e3)
+        front.warmup(ks=sorted(set(warm_ks)))   # ladder levels too
+        if front.controller is not None:
+            print(f"  scheduler ladder: "
+                  f"{[dict(lv) for lv in front.controller.ladder]}")
+    else:
+        front = MicroBatcher(engine, max_batch=args.max_batch,
+                             max_wait_ms=args.max_wait_ms)
 
     # --- traffic ---------------------------------------------------------
     rng = np.random.RandomState(1)
     qids = rng.randint(0, len(feats), args.requests)
     noisy = feats[qids] + 0.1 * rng.randn(args.requests, args.feat_dim) \
         .astype(np.float32)
+    mix = rng.choice(["interactive", "batch", "mining"],
+                     size=args.requests, p=[0.7, 0.2, 0.1])
     t0 = time.perf_counter()
-    pending = [(qid, time.perf_counter(), batcher.submit(noisy[i]))
-               for i, qid in enumerate(qids)]
-    lat, purity = [], []
+    pending, n_rejected = [], 0
+    for i, qid in enumerate(qids):
+        t_sub = time.perf_counter()
+        try:
+            if args.scheduler:
+                fut = front.submit(
+                    noisy[i], priority=str(mix[i]),
+                    deadline_s=(args.deadline_ms / 1e3
+                                if args.deadline_ms else None))
+            else:
+                fut = front.submit(noisy[i])
+            pending.append((qid, t_sub, fut))
+        except SchedulerError:                  # typed backpressure
+            n_rejected += 1
+    lat, purity, n_expired = [], [], 0
     for qid, t_sub, fut in pending:
-        _, nbr = fut.result(timeout=60)
+        try:
+            _, nbr = fut.result(timeout=60)
+        except SchedulerError:                  # deadline expired in queue
+            n_expired += 1
+            continue
         lat.append(time.perf_counter() - t_sub)
         # a loaded post-churn snapshot can serve rows upserted after this
         # run's synthetic label table was made; score only known ids
@@ -218,22 +283,35 @@ def main():
         if len(known):
             purity.append(float(np.mean(labels[known] == labels[qid])))
     wall = time.perf_counter() - t0
-    batcher.close()
+    front.close()
 
     lat_ms = np.sort(np.asarray(lat)) * 1e3
     st = engine.stats()
     print(f"requests={args.requests} wall={wall:.2f}s "
           f"qps={args.requests / wall:.0f} "
           f"(device-side qps={st['qps']:.0f})")
-    print(f"latency ms: p50={lat_ms[len(lat_ms) // 2]:.2f} "
-          f"p99={lat_ms[int(len(lat_ms) * 0.99) - 1]:.2f} "
-          f"max={lat_ms[-1]:.2f}")
-    print(f"batches={batcher.n_batches} "
-          f"mean batch={np.mean(batcher.batch_sizes):.1f}")
+    if lat_ms.size:
+        print(f"latency ms: p50={lat_ms[len(lat_ms) // 2]:.2f} "
+              f"p99={lat_ms[int(len(lat_ms) * 0.99) - 1]:.2f} "
+              f"max={lat_ms[-1]:.2f}")
+    print(f"batches={front.n_batches} "
+          f"mean batch={np.mean(front.batch_sizes):.1f}")
     print(f"cache: {st['cache_hits']} hits / {st['cache_misses']} misses "
           f"({st['cache_entries']} entries)")
     print(f"neighbor class purity@{args.k}: {np.mean(purity):.3f} "
           f"(chance {1.0 / args.n_classes:.3f})")
+    if args.scheduler:
+        obs = st["frontend"]
+        for name, c in obs["classes"].items():
+            print(f"  class {name}: admitted {c['admitted']} "
+                  f"completed {c['completed']} expired {c['expired']} "
+                  f"rejected {c['rejected']} p50={c['p50_ms']:.2f}ms "
+                  f"p99={c['p99_ms']:.2f}ms")
+        print(f"  degradation: level {obs['degradation_level']} "
+              f"knobs {obs['degradation_knobs']} "
+              f"({obs['n_transitions']} transition(s)); "
+              f"{n_rejected} rejected at admission, "
+              f"{n_expired} expired in queue")
 
     # --- hard-pair mining against the live engine ------------------------
     if args.mine > 0:

@@ -1,4 +1,4 @@
-"""Metric-space retrieval serving: index hierarchy -> engine -> batcher.
+"""Metric-space retrieval serving: index hierarchy -> engine -> front end.
 
 Query-side subsystem for the learned metric M = L^T L: a pluggable index
 hierarchy (index.py MetricIndex protocol, ExactIndex full scan; ivf.py
@@ -7,13 +7,24 @@ segments with ADC scoring + exact rerank) over the shared
 projection/shard/merge substrate (scan.py), the mutation lifecycle layer
 (mutable.py MutableIndex streaming upserts/deletes + compaction + metric
 hot-swap; snapshot.py save/load without re-projection), a bucketed jitted
-execution engine with a hot-query LRU cache (engine.py), and a
-request-coalescing front door (batcher.py). The fused device path is
-kernels/metric_topk.
+execution engine with a hot-query LRU cache (engine.py), and two front
+doors: a request-coalescing micro-batcher (batcher.py) and the
+traffic-shaped scheduler above it (scheduler.py: bounded admission,
+priority/deadline classes, adaptive degradation). All front-end timing
+runs on the injectable clock (clock.py) so tests are deterministic. The
+fused device path is kernels/metric_topk.
 """
 
 from repro.serve.batcher import MicroBatcher  # noqa: F401
+from repro.serve.clock import (Clock, FakeClock,  # noqa: F401
+                               SystemClock)
 from repro.serve.engine import RetrievalEngine  # noqa: F401
+from repro.serve.scheduler import (DEFAULT_CLASSES,  # noqa: F401
+                                   DeadlineExceededError, DegradeTransition,
+                                   LatencyWindow, LoadController,
+                                   PriorityClass, RejectedError,
+                                   RequestScheduler, SchedulerError,
+                                   default_ladder)
 from repro.serve.index import (ExactIndex, GalleryIndex,  # noqa: F401
                                MetricIndex)
 from repro.serve.ivf import IVFIndex, kmeans_projected  # noqa: F401

@@ -9,33 +9,41 @@ search, and distributes per-row results to the waiting futures.
 Batching here is what turns the engine's bucketed jit batches into high
 device utilization under many concurrent low-latency clients — the same
 shape as the async parameter-server's request queue on the training side.
+
+All timing (the coalescing wait) goes through an injectable ``Clock``
+(serve/clock.py): production uses ``SystemClock``; tests drive the wait
+deterministically with ``FakeClock.advance`` instead of sleeping. For
+traffic shaping *above* this layer — admission control, priorities,
+deadlines, adaptive degradation — see serve/scheduler.py, which forms its
+own deadline-aware batches on the same clock contract.
 """
 
 from __future__ import annotations
 
 import collections
-import queue
 import threading
-import time
 from concurrent.futures import Future
 from typing import Optional
 
 import numpy as np
 
+from repro.serve.clock import Clock, SystemClock
 from repro.serve.engine import RetrievalEngine
 
 
 class MicroBatcher:
     def __init__(self, engine: RetrievalEngine, max_batch: int = 64,
-                 max_wait_ms: float = 2.0):
+                 max_wait_ms: float = 2.0, clock: Optional[Clock] = None):
         self.engine = engine
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
-        self._queue: "queue.Queue" = queue.Queue()
+        self.clock = clock if clock is not None else SystemClock()
+        self._pending: collections.deque = collections.deque()
         self._closed = False
-        # orders every submit put before close()'s sentinel put, so no
-        # request can land in the queue after the worker's exit signal
-        self._lock = threading.Lock()
+        # one condition guards the deque and the closed flag: every submit
+        # lands before close() flips the flag, so no request can arrive
+        # after the worker's exit signal
+        self._cond = threading.Condition()
         self.n_batches = 0
         # bounded: a long-lived server would otherwise grow this forever
         self.batch_sizes: collections.deque = collections.deque(maxlen=4096)
@@ -58,40 +66,49 @@ class MicroBatcher:
         if q.shape != (d,):     # reject here, not in the shared worker
             raise ValueError(f"query shape {q.shape} != ({d},)")
         fut: Future = Future()
-        with self._lock:
+        with self._cond:
             if self._closed:
                 raise RuntimeError("batcher is closed")
-            self._queue.put((q, k, fut))
+            self._pending.append((q, k, fut))
+            self._cond.notify_all()
         return fut
 
-    def close(self, timeout: float = 10.0):
-        """Drain outstanding requests and stop the worker thread."""
-        with self._lock:
+    def close(self, timeout: float = 10.0) -> bool:
+        """Drain outstanding requests and stop the worker thread.
+
+        Returns True when the worker exited within ``timeout`` (real)
+        seconds, False when it is still alive — the join timing out used
+        to pass silently, leaving a live thread with no signal to the
+        caller. Idempotent; a False return may be retried.
+        """
+        with self._cond:
             self._closed = True
-            self._queue.put(None)           # wake the worker
+            self._cond.notify_all()         # wake the worker
         self._thread.join(timeout=timeout)
+        return not self._thread.is_alive()
 
     # -- worker ------------------------------------------------------------
 
     def _collect(self):
         """Block for the first request, then gather more until the batch is
-        full or the first request has waited max_wait_s."""
-        first = self._queue.get()
-        if first is None:
-            return None
-        batch = [first]
-        deadline = time.perf_counter() + self.max_wait_s
-        while len(batch) < self.max_batch:
-            remaining = deadline - time.perf_counter()
-            if remaining <= 0:
-                break
-            try:
-                item = self._queue.get(timeout=remaining)
-            except queue.Empty:
-                break
-            if item is None:
-                break
-            batch.append(item)
+        full or the first request has waited max_wait_s (clock time)."""
+        with self._cond:
+            while not self._pending:
+                if self._closed:
+                    return None
+                self.clock.wait_on(self._cond, None)
+            batch = [self._pending.popleft()]
+            deadline = self.clock.now() + self.max_wait_s
+            while len(batch) < self.max_batch:
+                if self._pending:
+                    batch.append(self._pending.popleft())
+                    continue
+                if self._closed:            # nothing more is coming
+                    break
+                remaining = deadline - self.clock.now()
+                if remaining <= 0:
+                    break
+                self.clock.wait_on(self._cond, remaining)
         return batch
 
     def _loop(self):
@@ -99,8 +116,9 @@ class MicroBatcher:
             batch = self._collect()
             if batch:
                 self._run_batch(batch)
-            if self._closed and self._queue.empty():
-                return
+            with self._cond:
+                if self._closed and not self._pending:
+                    return
 
     def _run_batch(self, batch):
         # set_running_or_notify_cancel guards every resolution: a rider the

@@ -69,6 +69,9 @@ class RetrievalEngine:
         self.backend = backend
         self.buckets = tuple(sorted(buckets))
         self.cache_size = cache_size
+        # attached traffic front end (serve/scheduler.py RequestScheduler
+        # sets this); stats() merges its observability block when present
+        self.frontend = None
         self.n_requests = 0
         self.n_queries = 0
         self.n_device_queries = 0
@@ -125,14 +128,21 @@ class RetrievalEngine:
 
     # -- search --------------------------------------------------------------
 
-    def search(self, queries, k_top: Optional[int] = None):
+    def search(self, queries, k_top: Optional[int] = None, **topk_kw):
         """queries (Nq, d) or a single (d,) vector. Returns
-        (dists (Nq, k_top), indices (Nq, k_top)) as numpy arrays."""
+        (dists (Nq, k_top), indices (Nq, k_top)) as numpy arrays.
+
+        Extra keyword args forward to ``index.topk`` — the degradation
+        hook: the scheduler passes per-request quality knobs (``nprobe``,
+        ``rerank``) here without the engine knowing their meaning. Knobs
+        join the cache key, so answers computed at degraded quality are
+        never served to full-quality lookups (or vice versa)."""
         # `is None`, not truthiness: `k_top or default` silently mapped an
         # explicit k_top=0 to the default instead of rejecting it
         k = self.k_top if k_top is None else k_top
         if k < 1:
             raise ValueError(f"k_top must be >= 1, got {k}")
+        knobs = tuple(sorted(topk_kw.items()))
         caching = self.cache_size > 0
         # keys come from host bytes, so with the cache on, stay in numpy
         # until the hit check fails — a full hit never touches the device
@@ -150,7 +160,7 @@ class RetrievalEngine:
 
         keys = None
         if caching:                 # disabled cache pays no hashing
-            keys = [(row.tobytes(), k) for row in q]
+            keys = [(row.tobytes(), k, knobs) for row in q]
             cached = self._cache_lookup(keys)
             if all(c is not None for c in cached):  # full hit: skip device
                 self.cache_hits += n
@@ -166,7 +176,7 @@ class RetrievalEngine:
             q = jnp.concatenate([q, jnp.zeros((b - n, q.shape[1]), q.dtype)])
 
         t0 = time.perf_counter()
-        dists, idxs = self.index.topk(q, k, backend=self.backend)
+        dists, idxs = self.index.topk(q, k, backend=self.backend, **topk_kw)
         dists, idxs = jax.block_until_ready((dists, idxs))
         self.busy_s += time.perf_counter() - t0
 
@@ -201,7 +211,10 @@ class RetrievalEngine:
         index (class name), cache_hits / cache_misses / cache_entries.
         Backend extras appear when the index exposes them: delta_rows /
         tombstones / compactions (MutableIndex), code_bytes_per_row /
-        compression_ratio (IVFPQIndex).
+        compression_ratio (IVFPQIndex). With a traffic front end attached
+        (serve/scheduler.py), a ``frontend`` sub-dict adds per-class
+        latency percentiles, queue depths, admission/rejection/expiry
+        counters, and the current degradation level.
         """
         # device qps over device-served queries only: cache hits add no
         # busy time and would inflate the ratio under repeat traffic
@@ -231,4 +244,6 @@ class RetrievalEngine:
             value = getattr(self.index, attr, None)
             if value is not None:
                 out[key] = value
+        if self.frontend is not None:
+            out["frontend"] = self.frontend.observability()
         return out

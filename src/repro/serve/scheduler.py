@@ -1,0 +1,569 @@
+"""Traffic-shaped request front end: admission, deadlines, degradation.
+
+The MicroBatcher coalesces requests; this layer models *traffic*. It sits
+between clients and the RetrievalEngine and owns the four serving
+behaviors an index alone cannot provide:
+
+  admission control   bounded per-class queues; a full queue rejects the
+                      submit with a typed ``RejectedError`` immediately
+                      (backpressure the client can act on) instead of
+                      letting latency grow without bound;
+  priority classes    each request belongs to a ``PriorityClass``
+                      (``interactive`` / ``batch`` / ``mining`` by
+                      default); batches are formed highest-priority-first,
+                      FIFO within a class, so cheap interactive lookups
+                      are never stuck behind a deep mining sweep;
+  deadlines           every request carries an absolute deadline; one that
+                      expires while queued fails fast with
+                      ``DeadlineExceededError`` and never occupies a batch
+                      slot or touches the engine;
+  adaptive degradation a ``LoadController`` watches queue depth and steps
+                      a quality ladder — per-level ``index.topk`` knob
+                      overrides (``nprobe``, ``rerank``) — down under
+                      sustained pressure and back up when it drains,
+                      spending less compute per query exactly when the
+                      queue says the budget is tight (the serving-side
+                      mirror of adaptive-sampling training, 1304.1192).
+                      Every transition is recorded with its trigger.
+
+All time — request expiry, batch-formation waits, degradation windows —
+flows through the injectable ``Clock`` (serve/clock.py), so the entire
+front end runs deterministically under ``FakeClock`` in tests: no sleeps,
+no timing races.
+
+Threading model: ``submit`` may be called from any number of client
+threads; ``n_workers`` worker threads form batches and feed the engine
+under one engine lock (the engine itself is single-caller by contract).
+Futures resolve exactly once — result, typed rejection, or client
+cancellation — guarded by ``set_running_or_notify_cancel``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+from concurrent.futures import Future
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.clock import Clock, SystemClock
+from repro.serve.engine import RetrievalEngine
+
+
+# -- typed request outcomes --------------------------------------------------
+
+class SchedulerError(Exception):
+    """Base for every typed front-end failure."""
+
+
+class RejectedError(SchedulerError):
+    """Admission refused: class queue at capacity, or scheduler closed."""
+
+
+class DeadlineExceededError(SchedulerError):
+    """The request's deadline passed while it waited in the queue."""
+
+
+# -- priority classes --------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PriorityClass:
+    """One traffic class: who goes first, how long they may wait, and how
+    many of them may queue.
+
+    priority: lower numbers are served first (strict: a batch never takes
+      a lower-priority request while a higher-priority one is admissible).
+    deadline_s: default per-request deadline (submit may override).
+    queue_cap: bounded admission queue; submits beyond it are rejected.
+    """
+    name: str
+    priority: int
+    deadline_s: float
+    queue_cap: int
+
+
+DEFAULT_CLASSES: Tuple[PriorityClass, ...] = (
+    PriorityClass("interactive", priority=0, deadline_s=0.100,
+                  queue_cap=256),
+    PriorityClass("batch", priority=1, deadline_s=1.0, queue_cap=1024),
+    PriorityClass("mining", priority=2, deadline_s=10.0, queue_cap=4096),
+)
+
+
+# -- per-class latency/counter stats -----------------------------------------
+
+class LatencyWindow:
+    """Bounded window of latency samples with percentile readout.
+
+    Thread-safe: ``record`` may race with ``percentile``/``snapshot``
+    (the lock makes each a consistent atomic snapshot). The window keeps
+    the most recent ``maxlen`` samples — a long-lived server reports
+    recent tail behavior, not its lifetime average.
+    """
+
+    def __init__(self, maxlen: int = 4096):
+        self._lock = threading.Lock()
+        self._samples: collections.deque = collections.deque(maxlen=maxlen)
+
+    def record(self, value: float) -> None:
+        with self._lock:
+            self._samples.append(float(value))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._samples)
+
+    def percentile(self, q) -> float:
+        """np.percentile (linear interpolation) over the current window;
+        NaN when empty. ``q`` may be a scalar or a sequence."""
+        with self._lock:
+            if not self._samples:
+                return (float("nan") if np.isscalar(q)
+                        else [float("nan")] * len(q))
+            arr = np.fromiter(self._samples, np.float64)
+        out = np.percentile(arr, q)
+        return float(out) if np.isscalar(q) else [float(v) for v in out]
+
+
+class _ClassStats:
+    """Monotone counters + latency window for one priority class. Counter
+    bumps hold the lock so concurrent submit/worker updates never lose an
+    increment; ``snapshot`` reads them atomically."""
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.admitted = 0
+        self.rejected = 0
+        self.expired = 0
+        self.completed = 0
+        self.failed = 0          # engine exceptions surfaced to futures
+        self.cancelled = 0
+        self.latency = LatencyWindow()
+
+    def bump(self, field: str, by: int = 1) -> None:
+        with self.lock:
+            setattr(self, field, getattr(self, field) + by)
+
+    def snapshot(self) -> dict:
+        with self.lock:
+            out = {f: getattr(self, f) for f in
+                   ("admitted", "rejected", "expired", "completed",
+                    "failed", "cancelled")}
+        p50, p99 = self.latency.percentile((50.0, 99.0))
+        out["p50_ms"] = p50 * 1e3
+        out["p99_ms"] = p99 * 1e3
+        return out
+
+
+# -- adaptive degradation ----------------------------------------------------
+
+def default_ladder(index, k_top: int, n_levels: int = 3) -> Tuple[dict, ...]:
+    """Derive a quality ladder from the index's own knobs.
+
+    Level 0 is always ``{}`` (build-time quality). Each deeper level
+    halves ``nprobe`` (floored so ``k_top`` still fits in the scanned
+    candidate pool) and, for PQ bases, halves the exact-rerank pool
+    (floored at ``k_top`` — IVFPQ clamps there anyway, and MutableIndex
+    rejects ``rerank=0``). Indexes with no knobs (ExactIndex) get the
+    single full-quality level: the controller then has nothing to trade,
+    and admission control alone carries overload.
+    """
+    base = getattr(index, "base", index)       # MutableIndex wraps
+    nprobe = getattr(base, "nprobe", None)
+    if nprobe is None:
+        return ({},)
+    cap = base.cap
+    nprobe_floor = max(1, -(-k_top // cap))    # ceil(k_top / cap)
+    rerank = getattr(base, "rerank_depth", None)
+    ladder = [{}]
+    for step in range(1, n_levels):
+        knobs = {"nprobe": max(nprobe_floor, nprobe >> step)}
+        if rerank:                             # 0 = ADC-only build: leave
+            knobs["rerank"] = max(k_top, rerank >> step)
+        if ladder[-1] != knobs:                # stop once floored flat
+            ladder.append(knobs)
+    return tuple(ladder)
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradeTransition:
+    """One recorded ladder move (t is clock time at the decision)."""
+    t: float
+    level_from: int
+    level_to: int
+    queue_depth: int
+    reason: str
+
+
+class LoadController:
+    """Queue-pressure feedback loop over a quality ladder.
+
+    The worker calls ``observe(queue_depth)`` before forming each batch;
+    sustained depth above ``high_watermark`` for ``degrade_window_s``
+    steps one ladder level down (cheaper queries), sustained depth at or
+    below ``low_watermark`` for ``restore_window_s`` steps back up.
+    Windows are measured on the injected clock, so hysteresis is
+    deterministic under FakeClock. Single-caller (the worker holding the
+    scheduler lock); readers see ``level`` / ``transitions`` atomically
+    under the GIL.
+    """
+
+    def __init__(self, ladder: Sequence[dict], clock: Clock,
+                 high_watermark: int = 32, low_watermark: int = 4,
+                 degrade_window_s: float = 0.05,
+                 restore_window_s: float = 0.5):
+        if not ladder or ladder[0] != {}:
+            raise ValueError("ladder[0] must be {} (full quality)")
+        if low_watermark >= high_watermark:
+            raise ValueError(f"low_watermark={low_watermark} must be < "
+                             f"high_watermark={high_watermark}")
+        self.ladder = tuple(dict(lv) for lv in ladder)
+        self.clock = clock
+        self.high_watermark = high_watermark
+        self.low_watermark = low_watermark
+        self.degrade_window_s = degrade_window_s
+        self.restore_window_s = restore_window_s
+        self.level = 0
+        self.transitions: list = []
+        self._over_since: Optional[float] = None
+        self._under_since: Optional[float] = None
+
+    def _move(self, to: int, depth: int, reason: str) -> None:
+        self.transitions.append(DegradeTransition(
+            self.clock.now(), self.level, to, depth, reason))
+        self.level = to
+        self._over_since = None
+        self._under_since = None
+
+    def observe(self, queue_depth: int) -> dict:
+        """Update pressure windows, maybe move a level, and return the
+        knob overrides to serve the next batch with."""
+        now = self.clock.now()
+        if queue_depth > self.high_watermark:
+            self._under_since = None
+            if self._over_since is None:
+                self._over_since = now
+            elif (now - self._over_since >= self.degrade_window_s
+                  and self.level < len(self.ladder) - 1):
+                self._move(self.level + 1, queue_depth,
+                           f"depth {queue_depth} > {self.high_watermark} "
+                           f"for {self.degrade_window_s}s")
+        elif queue_depth <= self.low_watermark:
+            self._over_since = None
+            if self._under_since is None:
+                self._under_since = now
+            elif (now - self._under_since >= self.restore_window_s
+                  and self.level > 0):
+                self._move(self.level - 1, queue_depth,
+                           f"depth {queue_depth} <= {self.low_watermark} "
+                           f"for {self.restore_window_s}s")
+        else:                       # between watermarks: hold the level
+            self._over_since = None
+            self._under_since = None
+        return self.ladder[self.level]
+
+
+# -- the scheduler -----------------------------------------------------------
+
+@dataclasses.dataclass
+class _Request:
+    q: np.ndarray
+    k: int
+    fut: Future
+    cls: PriorityClass
+    t_submit: float
+    t_deadline: float
+
+
+class RequestScheduler:
+    """Async request front end over a RetrievalEngine (module docstring
+    has the model). Construct, ``submit`` from any thread, ``close`` when
+    done; attach-time side effect: ``engine.frontend = self`` so
+    ``engine.stats()`` grows the front-end observability block.
+    """
+
+    def __init__(self, engine: RetrievalEngine,
+                 classes: Sequence[PriorityClass] = DEFAULT_CLASSES,
+                 max_batch: int = 64, max_wait_ms: float = 2.0,
+                 n_workers: int = 1, clock: Optional[Clock] = None,
+                 degrade: bool = True,
+                 ladder: Optional[Sequence[dict]] = None,
+                 high_watermark: int = 32, low_watermark: int = 4,
+                 degrade_window_s: float = 0.05,
+                 restore_window_s: float = 0.5):
+        if n_workers < 1:
+            raise ValueError(f"n_workers must be >= 1, got {n_workers}")
+        names = [c.name for c in classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate class names in {names}")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.clock = clock if clock is not None else SystemClock()
+        # strict priority: queues iterated in ascending priority order
+        self._classes: Dict[str, PriorityClass] = {
+            c.name: c for c in sorted(classes, key=lambda c: c.priority)}
+        self._queues: Dict[str, collections.deque] = {
+            name: collections.deque() for name in self._classes}
+        self._stats: Dict[str, _ClassStats] = {
+            name: _ClassStats() for name in self._classes}
+        self._cond = threading.Condition()
+        self._closed = False
+        self.n_batches = 0
+        self.batch_sizes: collections.deque = collections.deque(maxlen=4096)
+        if degrade:
+            lad = (tuple(ladder) if ladder is not None
+                   else default_ladder(engine.index, engine.k_top))
+            self.controller: Optional[LoadController] = LoadController(
+                lad, self.clock, high_watermark=high_watermark,
+                low_watermark=low_watermark,
+                degrade_window_s=degrade_window_s,
+                restore_window_s=restore_window_s)
+        else:
+            self.controller = None
+        # engine calls are serialized: the engine contract is one caller
+        # at a time (stats counters, LRU) — extra workers overlap only on
+        # host-side batch formation and future resolution
+        self._engine_lock = threading.Lock()
+        engine.frontend = self
+        self._threads = [
+            threading.Thread(target=self._loop, daemon=True,
+                             name=f"scheduler-worker-{i}")
+            for i in range(n_workers)]
+        for t in self._threads:
+            t.start()
+
+    # -- client side --------------------------------------------------------
+
+    def submit(self, query, k_top: Optional[int] = None,
+               priority: str = "interactive",
+               deadline_s: Optional[float] = None) -> Future:
+        """Enqueue one (d,) query under a priority class.
+
+        Returns a Future resolving to (dists (k,), ids (k,)). Admission
+        failures raise ``RejectedError`` *here* — a rejected request
+        never holds a queue slot. An admitted request always resolves:
+        result, ``DeadlineExceededError``, engine exception, or client
+        cancellation. ``deadline_s`` overrides the class default
+        (relative to now; must be > 0).
+        """
+        cls = self._classes.get(priority)
+        if cls is None:
+            raise ValueError(f"unknown priority class {priority!r} "
+                             f"(have {list(self._classes)})")
+        k = self.engine.k_top if k_top is None else k_top
+        if k < 1:
+            raise ValueError(f"k_top must be >= 1, got {k}")
+        if k > self.engine.k_top:
+            raise ValueError(f"k_top={k} > engine k_top="
+                             f"{self.engine.k_top}")
+        dl = cls.deadline_s if deadline_s is None else deadline_s
+        if dl <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {dl}")
+        q = np.asarray(query, np.float32)
+        d = self.engine.index.L.shape[1]
+        if q.shape != (d,):     # reject here, not in the shared worker
+            raise ValueError(f"query shape {q.shape} != ({d},)")
+        st = self._stats[cls.name]
+        with self._cond:
+            if self._closed:
+                st.bump("rejected")
+                raise RejectedError("scheduler is closed")
+            queue = self._queues[cls.name]
+            if len(queue) >= cls.queue_cap:
+                st.bump("rejected")
+                raise RejectedError(
+                    f"{cls.name} queue full ({cls.queue_cap}); retry "
+                    f"with backoff or shed load upstream")
+            now = self.clock.now()
+            fut: Future = Future()
+            queue.append(_Request(q, k, fut, cls, now, now + dl))
+            st.bump("admitted")
+            self._cond.notify_all()
+        return fut
+
+    def close(self, timeout: float = 10.0, drain: bool = True) -> bool:
+        """Stop the workers. ``drain=True`` serves already-admitted
+        requests first; ``drain=False`` fails them fast with
+        ``RejectedError``. Returns True when every worker exited within
+        ``timeout`` real seconds (False = at least one still alive, same
+        contract as ``MicroBatcher.close``)."""
+        with self._cond:
+            self._closed = True
+            if not drain:
+                for name, queue in self._queues.items():
+                    while queue:
+                        r = queue.popleft()
+                        if r.fut.set_running_or_notify_cancel():
+                            r.fut.set_exception(
+                                RejectedError("scheduler closed before "
+                                              "the request was served"))
+                            self._stats[name].bump("rejected")
+                        else:
+                            self._stats[name].bump("cancelled")
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join(timeout=timeout)
+        return not any(t.is_alive() for t in self._threads)
+
+    # -- worker side --------------------------------------------------------
+
+    def _depth_locked(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _pop_live_locked(self) -> Optional[_Request]:
+        """Pop the highest-priority non-expired request, failing expired
+        ones fast (typed error; they never occupy a batch slot)."""
+        now = self.clock.now()
+        for name, queue in self._queues.items():   # ascending priority
+            while queue:
+                r = queue.popleft()
+                if r.fut.cancelled():   # client walked away while queued
+                    self._stats[name].bump("cancelled")
+                    continue
+                if r.t_deadline <= now:
+                    if r.fut.set_running_or_notify_cancel():
+                        r.fut.set_exception(DeadlineExceededError(
+                            f"{name} deadline "
+                            f"{r.t_deadline - r.t_submit:.3f}s expired "
+                            f"in queue"))
+                        self._stats[name].bump("expired")
+                    else:
+                        self._stats[name].bump("cancelled")
+                    continue
+                return r
+        return None
+
+    def _collect(self) -> Optional[list]:
+        """Form one batch: highest-priority-first, FIFO within a class,
+        waiting at most ``max_wait_s`` past the first member — and never
+        past any collected member's deadline (deadline-aware formation:
+        idling a member into expiry would waste its admission)."""
+        with self._cond:
+            batch: list = []
+            while not batch:
+                r = self._pop_live_locked()
+                if r is not None:
+                    batch.append(r)
+                    break
+                if self._closed:
+                    return None
+                self.clock.wait_on(self._cond, None)
+            wait_until = self.clock.now() + self.max_wait_s
+            while len(batch) < self.max_batch:
+                r = self._pop_live_locked()
+                if r is not None:
+                    batch.append(r)
+                    continue
+                if self._closed:            # nothing more is coming
+                    break
+                bound = min(wait_until,
+                            min(m.t_deadline for m in batch))
+                remaining = bound - self.clock.now()
+                if remaining <= 0:
+                    break
+                self.clock.wait_on(self._cond, remaining)
+            return batch
+
+    def _loop(self):
+        while True:
+            batch = self._collect()
+            if batch:
+                self._run_batch(batch)
+            with self._cond:
+                if self._closed and self._depth_locked() == 0:
+                    return
+
+    def _run_batch(self, batch):
+        # claim every member exactly once before dispatch: a cancelled
+        # rider drops out here (it must not reach the engine), an expired
+        # one fails fast, and survivors are RUNNING — no InvalidStateError
+        # window between resolution paths
+        now = self.clock.now()
+        live = []
+        for r in batch:
+            if not r.fut.set_running_or_notify_cancel():
+                self._stats[r.cls.name].bump("cancelled")
+            elif r.t_deadline <= now:   # expired during batch formation
+                r.fut.set_exception(DeadlineExceededError(
+                    f"{r.cls.name} deadline expired during batch "
+                    f"formation"))
+                self._stats[r.cls.name].bump("expired")
+            else:
+                live.append(r)
+        if not live:
+            return
+        if self.controller is not None:
+            with self._cond:
+                depth = self._depth_locked()
+            knobs = self.controller.observe(depth)
+        else:
+            knobs = {}
+        try:
+            qs = np.stack([r.q for r in live])
+            with self._engine_lock:
+                dists, idxs = self.engine.search(qs, **knobs)
+        except Exception as e:          # fail every rider, keep serving
+            for r in live:              # already RUNNING: resolve directly
+                r.fut.set_exception(e)
+                self._stats[r.cls.name].bump("failed")
+            return
+        self.n_batches += 1
+        self.batch_sizes.append(len(live))
+        done = self.clock.now()
+        for row, r in enumerate(live):
+            st = self._stats[r.cls.name]
+            r.fut.set_result((dists[row, :r.k], idxs[row, :r.k]))
+            st.bump("completed")
+            st.latency.record(done - r.t_submit)
+
+    # -- warmup / observability ---------------------------------------------
+
+    def warmup(self, ks: Optional[Sequence[int]] = None) -> None:
+        """Pre-compile every (bucket, k) combination at every ladder
+        level, so the first degraded batch doesn't pay jit exactly when
+        the system is already overloaded."""
+        import jax.numpy as jnp
+        self.engine.warmup(ks=ks)                  # level 0
+        if self.controller is None:
+            return
+        ks = (self.engine.k_top,) if ks is None else tuple(ks)
+        d = self.engine.index.L.shape[1]
+        for knobs in self.controller.ladder[1:]:
+            for k in ks:
+                for b in self.engine.buckets:
+                    self.engine.index.topk(
+                        jnp.zeros((b, d), jnp.float32), k,
+                        backend=self.engine.backend, **knobs)
+
+    def observability(self) -> dict:
+        """The front-end block ``engine.stats()`` embeds: per-class
+        counters + latency percentiles + queue depths, plus the
+        degradation state. Safe to call from any thread (class counters
+        lock per class; queue depths snapshot under the scheduler lock)."""
+        with self._cond:
+            depths = {name: len(q) for name, q in self._queues.items()}
+            closed = self._closed
+        classes = {}
+        for name, st in self._stats.items():
+            snap = st.snapshot()
+            snap["queue_depth"] = depths[name]
+            classes[name] = snap
+        ctrl = self.controller
+        return {
+            "classes": classes,
+            "queue_depth": sum(depths.values()),
+            "rejections": sum(c["rejected"] for c in classes.values()),
+            "expired": sum(c["expired"] for c in classes.values()),
+            "n_batches": self.n_batches,
+            "closed": closed,
+            "degradation_level": 0 if ctrl is None else ctrl.level,
+            "degradation_knobs": ({} if ctrl is None
+                                  else dict(ctrl.ladder[ctrl.level])),
+            "n_transitions": (0 if ctrl is None
+                              else len(ctrl.transitions)),
+        }
+
+    stats = observability

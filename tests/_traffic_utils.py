@@ -1,0 +1,72 @@
+"""Shared test double for the serving front end (scheduler/batcher tests).
+
+A ``FakeEngine`` stands in for RetrievalEngine so front-end tests control
+the engine's behavior exactly:
+
+  * ``gate``    — a cleared gate blocks ``search`` until the test opens
+                  it, pinning the worker inside the engine so queues can
+                  be stuffed/inspected deterministically;
+  * ``entered`` — set when a search begins (the test's rendezvous that
+                  the worker is parked in the engine);
+  * ``fail``    — when True, ``search`` raises (typed-failure paths);
+  * ``calls``   — every served batch as (ids, topk kwargs), where a
+                  query's id is its vector's first element — so tests can
+                  assert exactly which requests reached the engine, in
+                  what order, under which degradation knobs.
+
+No jax, no device work: front-end logic only.
+"""
+
+from __future__ import annotations
+
+import threading
+from types import SimpleNamespace
+
+import numpy as np
+
+
+class FakeEngine:
+    def __init__(self, d: int = 4, k_top: int = 8):
+        self.k_top = k_top
+        self.backend = "xla"
+        self.buckets = (8,)
+        self.index = SimpleNamespace(
+            L=np.zeros((2, d), np.float32), version=0, size=1000,
+            n_shards=1)
+        self.frontend = None
+        self.gate = threading.Event()
+        self.gate.set()
+        self.entered = threading.Event()
+        self.fail = False
+        self._lock = threading.Lock()
+        self.calls: list = []
+
+    def search(self, qs, k_top=None, **topk_kw):
+        self.entered.set()
+        assert self.gate.wait(timeout=60), "test gate never opened"
+        with self._lock:
+            if self.fail:
+                raise RuntimeError("injected engine failure")
+            ids = [int(q[0]) for q in np.asarray(qs)]
+            self.calls.append((ids, dict(topk_kw)))
+        n = len(qs)
+        k = self.k_top if k_top is None else k_top
+        dists = np.zeros((n, k), np.float32)
+        idxs = np.tile(np.arange(k, dtype=np.int32), (n, 1))
+        return dists, idxs
+
+    def served_ids(self):
+        """Flat id list, engine arrival order."""
+        with self._lock:
+            return [i for ids, _ in self.calls for i in ids]
+
+    def call_kwargs(self):
+        with self._lock:
+            return [kw for _, kw in self.calls]
+
+
+def make_query(d: int, rid: int) -> np.ndarray:
+    """A query vector carrying its request id in element 0."""
+    q = np.zeros((d,), np.float32)
+    q[0] = rid
+    return q

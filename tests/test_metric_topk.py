@@ -18,7 +18,8 @@ import jax.numpy as jnp
 from repro.kernels.metric_topk import (metric_topk, metric_topk_naive,
                                        metric_topk_ref, metric_topk_xla,
                                        project_gallery)
-from repro.serve import GalleryIndex, MicroBatcher, RetrievalEngine
+from repro.serve import (FakeClock, GalleryIndex, MicroBatcher,
+                         RetrievalEngine)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -110,20 +111,42 @@ class TestServingStack:
         np.testing.assert_array_equal(pal[1], xla[1])
         np.testing.assert_allclose(pal[0], xla[0], rtol=1e-4, atol=1e-4)
 
+    @staticmethod
+    def _drain(clock, futs, max_wait_s, guard_s=60.0):
+        """Advance the fake clock until every future resolves: wait for
+        the worker to park on its coalescing timeout, then push time past
+        it. Condition-driven (wait_for_waiters), never sleep-driven."""
+        import time as _time
+        guard = _time.monotonic() + guard_s
+        while not all(f.done() for f in futs):
+            assert _time.monotonic() < guard, "futures never resolved"
+            try:
+                # short rendezvous: the worker may resolve everything and
+                # park untimed between our doneness check and this wait
+                clock.wait_for_waiters(1, timeout=0.2)
+            except TimeoutError:
+                continue
+            clock.advance(max_wait_s * 2)
+
     def test_microbatcher_coalesces_and_preserves_results(self):
         L, q, G = _data(30, 300, 32, 16)
         index = GalleryIndex.build(L, G)
         eng = RetrievalEngine(index, k_top=5)
         ref_d, ref_i = eng.search(q)
-        mb = MicroBatcher(eng, max_batch=16, max_wait_ms=20.0)
+        clock = FakeClock()
+        mb = MicroBatcher(eng, max_batch=16, max_wait_ms=20.0, clock=clock)
         futs = [mb.submit(np.asarray(q[i]), k_top=3) for i in range(30)]
+        # virtual time is frozen, so the worker can only dispatch a batch
+        # once it is *full* — coalescing is now exact, not probabilistic:
+        # 30 submits at max_batch=16 form precisely [16, 14]
+        self._drain(clock, futs, mb.max_wait_s)
         for i, f in enumerate(futs):
             d, idx = f.result(timeout=60)
             assert idx.shape == (3,)
             np.testing.assert_array_equal(idx, ref_i[i, :3])
-        mb.close()
-        assert mb.n_batches < 30, "batcher never coalesced"
-        assert sum(mb.batch_sizes) == 30
+        assert mb.close()
+        assert mb.n_batches == 2, "fake-clock coalescing must be exact"
+        assert list(mb.batch_sizes) == [16, 14]
         with pytest.raises(RuntimeError):
             mb.submit(np.asarray(q[0]))
 
@@ -132,17 +155,19 @@ class TestServingStack:
         L, q, G = _data(8, 100, 16, 8)
         eng = RetrievalEngine(GalleryIndex.build(L, G), k_top=3)
         eng.warmup()
-        mb = MicroBatcher(eng, max_batch=4, max_wait_ms=200.0)
+        clock = FakeClock()
+        mb = MicroBatcher(eng, max_batch=4, max_wait_ms=200.0, clock=clock)
         try:
             doomed = mb.submit(np.asarray(q[0]))
             assert doomed.cancel()
             alive = [mb.submit(np.asarray(q[i])) for i in range(1, 8)]
+            self._drain(clock, alive, mb.max_wait_s)
             for f in alive:
-                d, idx = f.result(timeout=30)   # hangs here if worker died
+                d, idx = f.result(timeout=30)   # resolved if worker lives
                 assert idx.shape == (3,)
             assert doomed.cancelled()
         finally:
-            mb.close()
+            assert mb.close()
 
     def test_batcher_rejects_oversized_k(self):
         L, q, G = _data(4, 64, 16, 8)
@@ -152,7 +177,7 @@ class TestServingStack:
             with pytest.raises(ValueError):
                 mb.submit(np.asarray(q[0]), k_top=9)
         finally:
-            mb.close()
+            assert mb.close()
 
 
 @pytest.mark.slow

@@ -1,0 +1,161 @@
+"""Property-based tests (hypothesis) on the serving front end.
+
+Random interleavings of submit / clock-advance / queue-pressure must never
+violate the scheduler's invariants:
+
+  * admission is bounded — a class queue never exceeds its cap, and a
+    submit is rejected iff the queue is full at that instant;
+  * expiry is exact — under a frozen drain clock, a request is served iff
+    its deadline is still ahead of the clock, expired otherwise (never
+    both, never neither: no silent drops);
+  * ordering — every dispatched batch is non-decreasing in priority, and
+    within one class requests reach the engine in FIFO submit order;
+  * the load controller only moves one ladder level at a time, only in
+    the direction its watermark justifies, and only after its hysteresis
+    window elapsed on the injected clock.
+
+The worker is pinned inside a gated FakeEngine while the op sequence
+runs, so queue state evolves exactly as modeled — no timing races.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from _traffic_utils import FakeEngine, make_query  # noqa: E402
+from repro.serve import (DeadlineExceededError, FakeClock,  # noqa: E402
+                         LoadController, PriorityClass, RejectedError,
+                         RequestScheduler)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+D = 4
+PLUG = 10 ** 6
+CLASSES = (
+    PriorityClass("interactive", priority=0, deadline_s=0.05, queue_cap=3),
+    PriorityClass("batch", priority=1, deadline_s=0.2, queue_cap=4),
+    PriorityClass("mining", priority=2, deadline_s=1.0, queue_cap=5),
+)
+PRIORITY_OF = {c.name: c.priority for c in CLASSES}
+LADDER = ({}, {"nprobe": 4}, {"nprobe": 2})
+
+_op = st.one_of(
+    st.tuples(st.just("submit"), st.integers(0, len(CLASSES) - 1),
+              st.sampled_from([0.01, 0.08, 5.0])),       # deadline_s
+    st.tuples(st.just("advance"), st.sampled_from([0.005, 0.02, 0.1])),
+)
+
+
+class TestSchedulerInterleavings:
+    @given(st.lists(_op, min_size=1, max_size=40))
+    @settings(**SETTINGS)
+    def test_invariants_hold_under_any_interleaving(self, ops):
+        clock = FakeClock()
+        eng = FakeEngine(d=D)
+        sched = RequestScheduler(
+            eng, classes=CLASSES, max_batch=4, max_wait_ms=0.0,
+            clock=clock, ladder=LADDER, high_watermark=6, low_watermark=1,
+            degrade_window_s=0.01, restore_window_s=0.02)
+        # pin the worker inside the engine so the op sequence sees exact,
+        # model-checkable queue state (nothing drains until we say so)
+        eng.gate.clear()
+        plug = sched.submit(make_query(D, PLUG), priority="mining",
+                            deadline_s=60.0)
+        assert eng.entered.wait(10), "worker never reached the engine"
+
+        depth = {c.name: 0 for c in CLASSES}   # queued while pinned
+        submit_order = {c.name: [] for c in CLASSES}
+        records = {}                           # rid -> (cls, t_deadline, fut)
+        rid = 0
+        try:
+            for op in ops:
+                if op[0] == "advance":
+                    clock.advance(op[1])
+                    continue
+                _, ci, dl = op
+                cls = CLASSES[ci]
+                was_full = depth[cls.name] >= cls.queue_cap
+                try:
+                    fut = sched.submit(make_query(D, rid),
+                                       priority=cls.name, deadline_s=dl)
+                except RejectedError:
+                    # bounded admission, and never spurious rejection
+                    assert was_full
+                    continue
+                assert not was_full, "queue exceeded its cap"
+                depth[cls.name] += 1
+                submit_order[cls.name].append(rid)
+                records[rid] = (cls.name, clock.now() + dl, fut)
+                rid += 1
+        finally:
+            eng.gate.set()                     # unpin before the join
+            assert sched.close(timeout=30, drain=True)
+
+        t_final = clock.now()                  # frozen through the drain
+        served = [i for i in eng.served_ids() if i != PLUG]
+        assert plug.result(timeout=0)
+
+        # exact expiry + exactly-once + no silent drops
+        for r, (cls_name, t_dl, fut) in records.items():
+            assert fut.done()
+            if t_dl <= t_final:
+                with pytest.raises(DeadlineExceededError):
+                    fut.result(timeout=0)
+                assert r not in served, "expired request reached the engine"
+            else:
+                dists, idxs = fut.result(timeout=0)
+                assert idxs.shape == (eng.k_top,)
+        assert len(served) == len(set(served)), "request served twice"
+
+        # every batch non-decreasing in priority; FIFO within a class
+        for ids, knobs in eng.calls:
+            prios = [PRIORITY_OF[records[i][0]] for i in ids if i != PLUG]
+            assert prios == sorted(prios)
+            assert knobs in [dict(lv) for lv in LADDER]
+        for cls_name, order in submit_order.items():
+            expect = [r for r in order if records[r][1] > t_final]
+            got = [i for i in served if records[i][0] == cls_name]
+            assert got == expect
+
+        obs = sched.observability()
+        assert obs["queue_depth"] == 0 and obs["closed"]
+        n_expired = sum(1 for _, t_dl, _ in records.values()
+                        if t_dl <= t_final)
+        assert obs["expired"] == n_expired
+        assert (sum(c["completed"] for c in obs["classes"].values())
+                == len(served) + 1)            # + the plug
+
+
+class TestLoadControllerInterleavings:
+    @given(st.lists(
+        st.tuples(st.sampled_from([0, 3, 10]),           # depth regime
+                  st.sampled_from([0.0, 0.005, 0.02, 0.1])),
+        min_size=1, max_size=60))
+    @settings(**SETTINGS)
+    def test_ladder_moves_are_justified_and_windowed(self, steps):
+        clock = FakeClock()
+        c = LoadController(LADDER, clock, high_watermark=5, low_watermark=1,
+                           degrade_window_s=0.01, restore_window_s=0.03)
+        for dep, dt in steps:
+            clock.advance(dt)
+            before = c.level
+            knobs = c.observe(dep)
+            assert 0 <= c.level < len(LADDER)
+            assert knobs == LADDER[c.level]
+            assert abs(c.level - before) <= 1
+            if c.level > before:
+                assert dep > 5                 # degrade only when over
+            if c.level < before:
+                assert dep <= 1                # restore only when drained
+        for tr in c.transitions:
+            assert abs(tr.level_to - tr.level_from) == 1
+        # hysteresis: each move's window elapses after the previous move
+        # (ladder moves reset both windows — no free-fall to the floor)
+        prev_t = 0.0
+        for tr in c.transitions:
+            window = (c.degrade_window_s if tr.level_to > tr.level_from
+                      else c.restore_window_s)
+            assert tr.t - prev_t >= window - 1e-9
+            prev_t = tr.t

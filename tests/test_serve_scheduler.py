@@ -1,0 +1,515 @@
+"""Traffic-shaped front end tests: admission, priorities, deadlines,
+degradation, close semantics, stats — all deterministic on FakeClock.
+
+Choreography pattern: a cleared FakeEngine ``gate`` pins the worker
+inside the engine (rendezvous via ``entered``), the test stuffs/advances/
+inspects queues in a known state, then opens the gate. With virtual time
+frozen, pop order, batch contents, and controller decisions are exact —
+no sleeps, no timing-window asserts anywhere in this file.
+"""
+
+import threading
+from concurrent.futures import CancelledError
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from _traffic_utils import FakeEngine, make_query
+from repro.serve import (DeadlineExceededError, FakeClock, LatencyWindow,
+                         LoadController, MicroBatcher, PriorityClass,
+                         RejectedError, RequestScheduler, default_ladder)
+
+D = 4
+
+
+def _scheduler(eng, clock, **kw):
+    kw.setdefault("max_wait_ms", 0.0)
+    return RequestScheduler(eng, clock=clock, **kw)
+
+
+def _plug(eng, sched, rid=999):
+    """Park the worker inside the engine: close the gate, submit a plug
+    request, and wait until the engine reports the worker entered."""
+    eng.gate.clear()
+    eng.entered.clear()
+    fut = sched.submit(make_query(D, rid), priority="mining")
+    assert eng.entered.wait(timeout=30), "worker never reached the engine"
+    return fut
+
+
+class TestPriorityAndDeadlines:
+    def test_batch_formed_priority_first_fifo_within_class(self):
+        eng = FakeEngine(d=D)
+        sched = _scheduler(eng, FakeClock(), max_batch=16, degrade=False)
+        try:
+            plug = _plug(eng, sched)
+            # submit in deliberately inverted priority order while the
+            # worker is pinned; they all sit queued
+            subs = [(100, "batch"), (101, "batch"), (200, "mining"),
+                    (10, "interactive"), (11, "interactive")]
+            futs = [sched.submit(make_query(D, r), priority=p)
+                    for r, p in subs]
+            eng.gate.set()
+            plug.result(timeout=30)
+            for f in futs:
+                f.result(timeout=30)
+            # one coalesced batch after the plug, highest-priority first,
+            # FIFO within each class
+            assert eng.calls[1][0] == [10, 11, 100, 101, 200]
+        finally:
+            assert sched.close()
+
+    def test_expired_fail_fast_and_never_reach_engine(self):
+        eng = FakeEngine(d=D)
+        clock = FakeClock()
+        sched = _scheduler(eng, clock, degrade=False)
+        try:
+            plug = _plug(eng, sched)
+            doomed = [sched.submit(make_query(D, r), deadline_s=0.05)
+                      for r in (1, 2, 3)]
+            alive = sched.submit(make_query(D, 4), deadline_s=10.0)
+            clock.advance(0.1)          # expire the 0.05s deadlines
+            eng.gate.set()
+            plug.result(timeout=30)
+            assert alive.result(timeout=30)[1].shape == (eng.k_top,)
+            for f in doomed:
+                with pytest.raises(DeadlineExceededError):
+                    f.result(timeout=30)
+            assert eng.served_ids() == [999, 4], \
+                "expired requests must never occupy a batch slot"
+            st = sched.stats()["classes"]["interactive"]
+            assert st["expired"] == 3 and st["completed"] == 1
+        finally:
+            assert sched.close()
+
+    def test_submit_validation(self):
+        eng = FakeEngine(d=D)
+        sched = _scheduler(eng, FakeClock(), degrade=False)
+        try:
+            with pytest.raises(ValueError):
+                sched.submit(make_query(D, 0), priority="vip")
+            with pytest.raises(ValueError):
+                sched.submit(make_query(D, 0), k_top=0)
+            with pytest.raises(ValueError):
+                sched.submit(make_query(D, 0), k_top=eng.k_top + 1)
+            with pytest.raises(ValueError):
+                sched.submit(make_query(D, 0), deadline_s=0.0)
+            with pytest.raises(ValueError):
+                sched.submit(np.zeros((D + 1,), np.float32))
+        finally:
+            assert sched.close()
+
+
+class TestAdmissionControl:
+    def test_bounded_queue_rejects_typed(self):
+        eng = FakeEngine(d=D)
+        classes = (PriorityClass("interactive", 0, 1.0, queue_cap=2),
+                   PriorityClass("mining", 2, 10.0, queue_cap=8))
+        sched = _scheduler(eng, FakeClock(), classes=classes,
+                           degrade=False)
+        try:
+            plug = _plug(eng, sched)        # mining: leaves interactive
+            ok = [sched.submit(make_query(D, r)) for r in (1, 2)]
+            with pytest.raises(RejectedError):
+                sched.submit(make_query(D, 3))
+            st = sched.stats()["classes"]["interactive"]
+            assert st["rejected"] == 1 and st["queue_depth"] == 2
+            eng.gate.set()
+            for f in ok + [plug]:
+                f.result(timeout=30)
+            # a rejected request never held a slot: both admitted ones
+            # (and only those) were served
+            assert 3 not in eng.served_ids()
+        finally:
+            assert sched.close()
+
+    def test_rejection_is_synchronous_no_future_leak(self):
+        eng = FakeEngine(d=D)
+        classes = (PriorityClass("interactive", 0, 1.0, queue_cap=1),)
+        sched = _scheduler(eng, FakeClock(), classes=classes,
+                           degrade=False)
+        try:
+            eng.gate.clear()
+            eng.entered.clear()
+            f1 = sched.submit(make_query(D, 1))
+            assert eng.entered.wait(timeout=30)
+            f2 = sched.submit(make_query(D, 2))     # fills the queue
+            with pytest.raises(RejectedError):
+                sched.submit(make_query(D, 3))
+            eng.gate.set()
+            assert f1.result(timeout=30) and f2.result(timeout=30)
+        finally:
+            assert sched.close()
+
+
+class TestCloseSemantics:
+    def test_close_reports_failure_then_success(self):
+        eng = FakeEngine(d=D)
+        sched = _scheduler(eng, FakeClock(), degrade=False)
+        plug = _plug(eng, sched)
+        # worker is pinned inside the engine: join must time out and
+        # close must SAY so (the old batcher close swallowed this)
+        assert sched.close(timeout=0.2) is False
+        eng.gate.set()
+        assert sched.close(timeout=30) is True
+        assert plug.result(timeout=30)
+
+    def test_close_drain_false_fails_pending_typed(self):
+        eng = FakeEngine(d=D)
+        sched = _scheduler(eng, FakeClock(), degrade=False)
+        plug = _plug(eng, sched)
+        pending = [sched.submit(make_query(D, r)) for r in (1, 2, 3)]
+        sched.close(timeout=0.0, drain=False)   # workers still pinned
+        for f in pending:                       # failed immediately
+            with pytest.raises(RejectedError):
+                f.result(timeout=30)
+        eng.gate.set()
+        assert sched.close(timeout=30) is True
+        assert plug.result(timeout=30)          # in-flight one completes
+        assert eng.served_ids() == [999]
+        with pytest.raises(RejectedError):
+            sched.submit(make_query(D, 4))
+
+    def test_batcher_close_reports_failure_then_success(self):
+        eng = FakeEngine(d=D)
+        mb = MicroBatcher(eng, max_batch=4, max_wait_ms=0.0,
+                          clock=FakeClock())
+        eng.gate.clear()
+        eng.entered.clear()
+        fut = mb.submit(make_query(D, 1))
+        assert eng.entered.wait(timeout=30)
+        assert mb.close(timeout=0.2) is False   # worker stuck in engine
+        eng.gate.set()
+        assert mb.close(timeout=30) is True
+        assert fut.result(timeout=30)
+
+
+class TestDegradation:
+    def test_controller_degrade_and_restore_windows(self):
+        clock = FakeClock()
+        ladder = ({}, {"nprobe": 4}, {"nprobe": 2})
+        c = LoadController(ladder, clock, high_watermark=8,
+                           low_watermark=2, degrade_window_s=0.05,
+                           restore_window_s=0.5)
+        assert c.observe(20) == {}              # starts the over-window
+        clock.advance(0.04)
+        assert c.observe(20) == {}              # window not elapsed yet
+        clock.advance(0.02)
+        assert c.observe(20) == {"nprobe": 4}   # sustained -> degrade
+        # each ladder step resets the window: pressure must be sustained
+        # again before degrading deeper (no free-fall to the floor)
+        assert c.observe(20) == {"nprobe": 4}
+        clock.advance(0.06)
+        assert c.observe(20) == {"nprobe": 2}   # sustained again -> deeper
+        clock.advance(1.0)
+        assert c.observe(20) == {"nprobe": 2}   # ladder floor holds
+        assert c.observe(5) == {"nprobe": 2}    # between marks: hold
+        assert c.observe(0) == {"nprobe": 2}    # starts the under-window
+        clock.advance(0.6)
+        assert c.observe(0) == {"nprobe": 4}    # drained -> restore
+        assert c.observe(0) == {"nprobe": 4}    # restore window reset too
+        clock.advance(0.6)
+        assert c.observe(0) == {}
+        levels = [(t.level_from, t.level_to) for t in c.transitions]
+        assert levels == [(0, 1), (1, 2), (2, 1), (1, 0)]
+        assert all(t.reason for t in c.transitions)
+        # timestamps come from the fake clock, monotone
+        ts = [t.t for t in c.transitions]
+        assert ts == sorted(ts)
+
+    def test_degrade_knobs_reach_engine(self):
+        eng = FakeEngine(d=D)
+        sched = _scheduler(
+            eng, FakeClock(), max_batch=2, degrade=True,
+            ladder=({}, {"nprobe": 2}), high_watermark=2, low_watermark=1,
+            degrade_window_s=0.0)
+        try:
+            plug = _plug(eng, sched)
+            futs = [sched.submit(make_query(D, r)) for r in range(8)]
+            eng.gate.set()
+            plug.result(timeout=30)
+            for f in futs:
+                f.result(timeout=30)
+            # depth at observe time: 0 (plug), then 6, 4, 2, 0 — the
+            # second sustained-high observation flips to level 1 and the
+            # knob rides every batch from there
+            assert eng.call_kwargs() == [{}, {}, {"nprobe": 2},
+                                         {"nprobe": 2}, {"nprobe": 2}]
+            st = sched.stats()
+            assert st["degradation_level"] == 1
+            assert st["degradation_knobs"] == {"nprobe": 2}
+            assert st["n_transitions"] == 1
+            tr = sched.controller.transitions[0]
+            assert (tr.level_from, tr.level_to) == (0, 1)
+            assert tr.queue_depth == 4
+        finally:
+            assert sched.close()
+
+    def test_default_ladder_from_index_knobs(self):
+        ivf = SimpleNamespace(nprobe=8, cap=16)
+        assert default_ladder(ivf, k_top=10) == (
+            {}, {"nprobe": 4}, {"nprobe": 2})
+        pq = SimpleNamespace(nprobe=8, cap=16, rerank_depth=64)
+        assert default_ladder(pq, k_top=10) == (
+            {}, {"nprobe": 4, "rerank": 32}, {"nprobe": 2, "rerank": 16})
+        # rerank floors at k_top, nprobe floors at ceil(k_top / cap)
+        assert default_ladder(pq, k_top=40, n_levels=4) == (
+            {}, {"nprobe": 4, "rerank": 40}, {"nprobe": 3, "rerank": 40})
+        # MutableIndex wrapper: knobs come from .base
+        wrapped = SimpleNamespace(base=ivf)
+        assert default_ladder(wrapped, k_top=10) == (
+            {}, {"nprobe": 4}, {"nprobe": 2})
+        # exact index: no knobs to trade -> single full-quality level
+        assert default_ladder(SimpleNamespace(), k_top=10) == ({},)
+        # duplicate-flat levels collapse
+        assert default_ladder(SimpleNamespace(nprobe=2, cap=16),
+                              k_top=10) == ({}, {"nprobe": 1})
+
+    def test_ladder_validation(self):
+        clock = FakeClock()
+        with pytest.raises(ValueError):
+            LoadController(({"nprobe": 2},), clock)     # level 0 not {}
+        with pytest.raises(ValueError):
+            LoadController(({},), clock, high_watermark=4,
+                           low_watermark=4)
+
+
+class TestStatsObservability:
+    def test_latency_window_percentiles_on_known_samples(self):
+        w = LatencyWindow(maxlen=1024)
+        samples = [0.010, 0.020, 0.030, 0.040, 0.100]
+        for s in samples:
+            w.record(s)
+        assert w.percentile(50.0) == pytest.approx(
+            np.percentile(samples, 50.0))
+        p50, p99 = w.percentile((50.0, 99.0))
+        assert p50 == pytest.approx(0.030)
+        assert p99 == pytest.approx(np.percentile(samples, 99.0))
+        assert len(w) == 5
+        # empty window reports NaN, not a crash
+        empty = LatencyWindow()
+        assert np.isnan(empty.percentile(99.0))
+        assert all(np.isnan(v) for v in empty.percentile((50.0, 99.0)))
+        # bounded: only the newest maxlen samples count
+        small = LatencyWindow(maxlen=3)
+        for s in (1.0, 2.0, 3.0, 4.0):
+            small.record(s)
+        assert small.percentile(50.0) == pytest.approx(3.0)
+
+    def test_scheduler_latency_percentiles_on_fake_clock(self):
+        # latency = resolve time - submit time in *virtual* seconds: the
+        # plugged worker holds the batch while we advance a known amount
+        eng = FakeEngine(d=D)
+        clock = FakeClock()
+        sched = _scheduler(eng, clock, degrade=False)
+        try:
+            plug = _plug(eng, sched)
+            fut = sched.submit(make_query(D, 1), deadline_s=10.0)
+            clock.advance(0.25)
+            eng.gate.set()
+            plug.result(timeout=30)
+            fut.result(timeout=30)
+            st = sched.stats()["classes"]["interactive"]
+            assert st["p50_ms"] == pytest.approx(250.0)
+            assert st["p99_ms"] == pytest.approx(250.0)
+        finally:
+            assert sched.close()
+
+    def test_counters_monotone_and_race_free_under_concurrent_submit(self):
+        eng = FakeEngine(d=D)
+        sched = _scheduler(eng, FakeClock(), max_batch=8, degrade=False)
+        stop = threading.Event()
+        errs: list = []
+
+        def client(tid):
+            try:
+                for i in range(200):
+                    try:
+                        sched.submit(make_query(D, tid * 1000 + i))
+                    except RejectedError:
+                        pass
+            except Exception as e:          # pragma: no cover
+                errs.append(e)
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(4)]
+        for t in threads:
+            t.start()
+        prev: dict = {}
+        counter_keys = ("admitted", "rejected", "expired", "completed",
+                        "failed", "cancelled")
+        # reader races the submitters + worker; every snapshot must be
+        # well-formed and counters must never move backwards
+        while any(t.is_alive() for t in threads):
+            snap = sched.observability()
+            for name, cls in snap["classes"].items():
+                for key in counter_keys:
+                    assert cls[key] >= prev.get((name, key), 0)
+                    prev[(name, key)] = cls[key]
+                assert cls["completed"] + cls["expired"] <= cls["admitted"]
+        for t in threads:
+            t.join()
+        assert not errs
+        assert sched.close()
+        snap = sched.observability()["classes"]["interactive"]
+        # drain-close: every admitted request resolved
+        assert snap["admitted"] == 800 - snap["rejected"]
+        assert snap["admitted"] == (snap["completed"] + snap["expired"]
+                                    + snap["cancelled"] + snap["failed"])
+
+    def test_engine_stats_embeds_frontend_block(self):
+        import jax.numpy as jnp
+        from repro.serve import ExactIndex, RetrievalEngine
+        rng = np.random.RandomState(0)
+        G = rng.randn(200, 8).astype(np.float32)
+        L = 0.3 * rng.randn(4, 8).astype(np.float32)
+        eng = RetrievalEngine(ExactIndex.build(jnp.asarray(L),
+                                               jnp.asarray(G)), k_top=3)
+        assert "frontend" not in eng.stats()
+        sched = RequestScheduler(eng, clock=FakeClock(), max_wait_ms=0.0)
+        try:
+            fut = sched.submit(G[0])
+            d, i = fut.result(timeout=60)
+            ref_d, ref_i = eng.search(G[0])
+            np.testing.assert_array_equal(i, ref_i)
+            fe = eng.stats()["frontend"]
+            assert fe["classes"]["interactive"]["completed"] == 1
+            assert fe["degradation_level"] == 0
+            assert fe["queue_depth"] == 0
+        finally:
+            assert sched.close()
+
+    def test_engine_cache_keys_include_degradation_knobs(self):
+        import jax.numpy as jnp
+        from repro.serve import IVFIndex, RetrievalEngine
+        rng = np.random.RandomState(0)
+        G = rng.randn(512, 16).astype(np.float32)
+        L = 0.3 * rng.randn(8, 16).astype(np.float32)
+        eng = RetrievalEngine(
+            IVFIndex.build(jnp.asarray(L), jnp.asarray(G), n_clusters=8,
+                           nprobe=8),
+            k_top=5, cache_size=64)
+        q = G[0]
+        eng.search(q)                       # miss
+        eng.search(q)                       # hit (same knobs)
+        assert (eng.cache_hits, eng.cache_misses) == (1, 1)
+        eng.search(q, nprobe=1)             # same bytes, new knobs
+        assert eng.cache_misses == 2, \
+            "degraded lookup must not be served from the full-quality key"
+        eng.search(q, nprobe=1)             # hit on the degraded key
+        assert eng.cache_hits == 2
+        assert len(eng._cache) == 2
+        d_full, i_full = eng.search(q)      # still the full-quality entry
+        np.testing.assert_array_equal(
+            i_full, eng.search(q, nprobe=8)[1])
+
+
+class TestStressInterleavings:
+    """Satellite: N submitters racing close/cancel/engine-exception
+    events. The invariants hold under EVERY interleaving, so the test is
+    assertion-deterministic even though the schedule itself races."""
+
+    N_THREADS = 6
+    N_PER = 40
+
+    def _storm(self, submit_one, clock):
+        futs: list = []
+        futs_lock = threading.Lock()
+        rejected = [0]
+
+        def client(tid):
+            for i in range(self.N_PER):
+                rid = tid * 1000 + i
+                try:
+                    f = submit_one(rid)
+                except (RejectedError, RuntimeError):
+                    with futs_lock:         # typed admission pushback
+                        rejected[0] += 1
+                    continue
+                with futs_lock:
+                    futs.append(f)
+                if i % 7 == 3:
+                    f.cancel()              # client walks away
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(self.N_THREADS)]
+        for t in threads:
+            t.start()
+        return threads, futs, rejected
+
+    def _assert_exactly_once(self, futs, allowed_errors):
+        outcomes = {"result": 0, "error": 0, "cancelled": 0}
+        for f in futs:
+            assert f.done(), "an admitted future never resolved"
+            if f.cancelled():
+                outcomes["cancelled"] += 1
+                continue
+            err = f.exception(timeout=0)
+            if err is None:
+                assert f.result(timeout=0)[1].shape[0] > 0
+                outcomes["result"] += 1
+            else:
+                assert isinstance(err, allowed_errors), repr(err)
+                outcomes["error"] += 1
+        assert sum(outcomes.values()) == len(futs)
+        return outcomes
+
+    def test_scheduler_storm_every_future_resolves_exactly_once(self):
+        eng = FakeEngine(d=D)
+        clock = FakeClock()
+        classes = (PriorityClass("interactive", 0, 5.0, queue_cap=64),)
+        sched = RequestScheduler(eng, classes=classes, max_batch=8,
+                                 max_wait_ms=1.0, clock=clock,
+                                 degrade=False)
+        threads, futs, rejected = self._storm(
+            lambda rid: sched.submit(make_query(D, rid)), clock)
+        # race engine failures and time against the storm: whatever the
+        # interleaving, outcomes stay typed and exactly-once
+        for _ in range(10):
+            eng.fail = not eng.fail
+            clock.advance(0.8)
+        eng.fail = False
+        for t in threads:
+            t.join()
+        assert sched.close(timeout=60) is True, "worker did not survive"
+        outcomes = self._assert_exactly_once(
+            futs, (RuntimeError, DeadlineExceededError))
+        st = sched.observability()["classes"]["interactive"]
+        assert st["admitted"] == len(futs)
+        assert st["rejected"] == rejected[0]
+        assert st["admitted"] == (st["completed"] + st["expired"]
+                                  + st["failed"] + st["cancelled"])
+        assert outcomes["result"] == st["completed"]
+        # the engine kept getting work after failures were injected
+        assert eng.calls, "no batch ever reached the engine"
+
+    def test_batcher_storm_every_future_resolves_exactly_once(self):
+        eng = FakeEngine(d=D)
+        clock = FakeClock()
+        mb = MicroBatcher(eng, max_batch=8, max_wait_ms=1.0, clock=clock)
+        threads, futs, _ = self._storm(
+            lambda rid: mb.submit(make_query(D, rid)), clock)
+        for _ in range(10):
+            eng.fail = not eng.fail
+            clock.advance(0.01)
+        eng.fail = False
+        for t in threads:
+            t.join()
+        assert mb.close(timeout=60) is True, "worker did not survive"
+        self._assert_exactly_once(futs, (RuntimeError,))
+        assert sum(mb.batch_sizes) <= len(futs)
+
+    def test_cancelled_future_raises_cancelled_error_to_caller(self):
+        eng = FakeEngine(d=D)
+        sched = _scheduler(eng, FakeClock(), degrade=False)
+        try:
+            plug = _plug(eng, sched)
+            doomed = sched.submit(make_query(D, 1))
+            assert doomed.cancel()
+            eng.gate.set()
+            plug.result(timeout=30)
+            with pytest.raises(CancelledError):
+                doomed.result(timeout=30)
+            assert 1 not in eng.served_ids()
+        finally:
+            assert sched.close()
