@@ -1,0 +1,98 @@
+"""CI gate: fail if a fresh BENCH_*.json regresses QPS vs the committed one.
+
+Run after the benchmark --smoke steps have rewritten the BENCH_*.json
+files in the repo root:
+
+    PYTHONPATH=src python benchmarks/check_bench.py [--threshold 0.8]
+
+For every ``BENCH_*.json`` in the working tree, the committed baseline
+is read from ``git show HEAD:<file>``; every numeric whose key starts
+with ``qps`` is compared *pathwise* (same nested location in both
+payloads — list entries pair by index). A fresh value below
+``threshold`` x baseline fails the run; new files, new keys, and
+structural mismatches (a resized sweep) are reported but never fail —
+only a like-for-like throughput drop does. The threshold is loose (20%)
+on purpose: CI runners are noisy, and the gate exists to catch
+order-of-magnitude faceplants (a kernel silently falling back to a slow
+path), not single-digit jitter.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def iter_qps(node, path=""):
+    """Yield (json-path, value) for every numeric under a qps* key."""
+    if isinstance(node, dict):
+        for k in sorted(node):
+            sub = f"{path}.{k}" if path else k
+            v = node[k]
+            if (k.startswith("qps") and isinstance(v, (int, float))
+                    and not isinstance(v, bool)):
+                yield sub, float(v)
+            else:
+                yield from iter_qps(v, sub)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from iter_qps(v, f"{path}[{i}]")
+
+
+def baseline(relpath: str):
+    """The committed copy of ``relpath``, or None if HEAD lacks it."""
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{relpath}"], cwd=REPO, check=True,
+            capture_output=True).stdout
+    except subprocess.CalledProcessError:
+        return None
+    return json.loads(blob)
+
+
+def main(threshold: float) -> int:
+    failures = []
+    checked = 0
+    for path in sorted(glob.glob(os.path.join(REPO, "BENCH_*.json"))):
+        rel = os.path.relpath(path, REPO)
+        old = baseline(rel)
+        if old is None:
+            print(f"{rel}: no committed baseline (new file), skipping")
+            continue
+        with open(path) as f:
+            new = json.load(f)
+        old_qps = dict(iter_qps(old))
+        new_qps = dict(iter_qps(new))
+        for key, was in sorted(old_qps.items()):
+            now = new_qps.get(key)
+            if now is None:         # resized sweep / renamed section
+                print(f"{rel}: {key} absent in fresh run "
+                      f"(was {was:.0f}), skipping")
+                continue
+            checked += 1
+            ratio = now / was if was > 0 else float("inf")
+            mark = "FAIL" if ratio < threshold else "ok"
+            print(f"{rel}: {key}: {was:.0f} -> {now:.0f} qps "
+                  f"({ratio:.2f}x)  [{mark}]")
+            if ratio < threshold:
+                failures.append((rel, key, was, now))
+    print(f"\nchecked {checked} qps figure(s), {len(failures)} below "
+          f"{threshold:.0%} of baseline")
+    for rel, key, was, now in failures:
+        print(f"  REGRESSION {rel}: {key} {was:.0f} -> {now:.0f}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threshold", type=float, default=0.8,
+                    help="fail below this fraction of the committed "
+                         "baseline (default 0.8)")
+    a = ap.parse_args()
+    sys.exit(main(a.threshold))

@@ -1,3 +1,4 @@
 from repro.kernels import (  # noqa: F401
-    dml_pair, flash_attention, metric_topk, pairwise_dist,
+    dml_pair, flash_attention, ivf_scan, metric_topk, pairwise_dist,
+    pq_adc,
 )

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: fused IVF segment gather + factored distance + top-k.
+
+The IVF serving hot loop (serve/ivf.py): per query, gather the
+full-precision rows of its ``nprobe`` probed segments, score them with
+the factored squared distance, and stream-merge a running top-kk —
+without materializing the (block_q, nprobe, cap, k) segment gather the
+XLA path pays for in HBM.
+
+Same skeleton as kernels/pq_adc: grid (Nq, nprobe * nsteps), one query
+per program row, probe/tile stream innermost, probe list as a
+scalar-prefetch operand so the gp/gn/id block index maps DMA the right
+(bM, k) segment tile per step, running (1, kk) best buffers in VMEM
+scratch, best-index init -1 (BIG-sentinel survivors must look like real
+pad candidates; ops.py masks and re-sorts). The only body difference is
+the score: an MXU dot of the (1, k) query row against the (bM, k) tile
+replaces the one-hot LUT accumulate — which also means the contraction
+over k is a genuine reduction, so distances match the XLA reference to
+rounding, not bitwise (pq_adc's per-term-exact trick has no analogue
+here; metric_topk has the same property).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.metric_topk.kernel import BIG, _merge_topk
+
+
+def _ivf_scan_kernel(probes_ref, qp_ref, g_ref, gn_ref, ids_ref,
+                     od_ref, oi_ref, bd_ref, bi_ref, *, kk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _reset():
+        bd_ref[...] = jnp.full(bd_ref.shape, BIG, jnp.float32)
+        bi_ref[...] = jnp.full(bi_ref.shape, -1, jnp.int32)
+
+    qp = qp_ref[...]                                     # (1, k)
+    qn = jnp.sum(jnp.square(qp), axis=1)                 # (1,)
+    cross = jax.lax.dot_general(                         # (1, bM)
+        qp, g_ref[...],
+        (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    d = jnp.maximum(qn[:, None] + gn_ref[...][None, :] - 2.0 * cross, 0.0)
+
+    bd, bi = _merge_topk(bd_ref[...], bi_ref[...], d,
+                         ids_ref[...][None, :], kk)
+    bd_ref[...] = bd
+    bi_ref[...] = bi
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _epilogue():
+        od_ref[...] = bd_ref[...]
+        oi_ref[...] = bi_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "kk", "block_m",
+                                             "interpret"))
+def ivf_scan_topk_fused(probes, qp, g, gn, ids, *, cap: int, kk: int,
+                        block_m: int, interpret: bool = True):
+    """Fused probed-segment scan + streaming top-k.
+
+    Args:
+      probes: (Nq, nprobe) int32 probed cluster ids (scalar-prefetch).
+      qp: (Nq, k) projected queries, k lane-padded with zeros.
+      g: (C*cap, k) segment rows (lane-padded to match qp);
+        gn: (C*cap,) row norms (+BIG pads); ids: (C*cap,) int32 ids
+        (-1 pads).
+      cap: rows per segment; block_m: rows per tile, must divide cap.
+
+    Returns (dists (Nq, kk) f32, ids (Nq, kk) int32) in streaming-merge
+    order; ids at the BIG sentinel may repeat a knocked-out winner —
+    ops.py masks them to -1 before the final sort.
+    """
+    Nq, nprobe = probes.shape
+    rows, k = g.shape
+    bM = block_m
+    assert cap % bM == 0 and rows % cap == 0, (rows, cap, bM)
+    assert kk <= nprobe * cap, (kk, nprobe, cap)
+    nsteps = cap // bM          # tiles per probed segment
+
+    def seg_row(q, j, pr):      # flat tile index of stream step j
+        return pr[q, j // nsteps] * nsteps + j % nsteps
+
+    kernel = functools.partial(_ivf_scan_kernel, kk=kk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(Nq, nprobe * nsteps),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda q, j, pr: (q, 0)),   # qp row
+            pl.BlockSpec((bM, k),
+                         lambda q, j, pr: (seg_row(q, j, pr), 0)),
+            pl.BlockSpec((bM,),
+                         lambda q, j, pr: (seg_row(q, j, pr),)),
+            pl.BlockSpec((bM,),
+                         lambda q, j, pr: (seg_row(q, j, pr),)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kk), lambda q, j, pr: (q, 0)),
+            pl.BlockSpec((1, kk), lambda q, j, pr: (q, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, kk), jnp.float32),   # running best distances
+            pltpu.VMEM((1, kk), jnp.int32),     # running best ids
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Nq, kk), jnp.float32),
+            jax.ShapeDtypeStruct((Nq, kk), jnp.int32),
+        ],
+        interpret=interpret,
+    )(probes, qp, g, gn, ids)

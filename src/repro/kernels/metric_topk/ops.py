@@ -24,6 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._dispatch import (LANE, SUBLANE, default_interpret,
+                                     pad_axis, pick_block, round_up)
 from repro.kernels.metric_topk.kernel import BIG, metric_topk_fused
 from repro.kernels.metric_topk.ref import metric_topk_ref
 
@@ -47,19 +49,6 @@ def metric_topk_xla(L, queries, gp, gn, k_top: int):
     return metric_topk_ref(qp, gp, k_top, gn)
 
 
-def _round_up(n: int, mult: int) -> int:
-    return n + (-n) % mult
-
-
-def _pad_axis(x, target: int, axis: int, value=0.0):
-    pad = target - x.shape[axis]
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)
-
-
 def metric_topk(L, queries, gp, gn=None, *, k_top: int = 10,
                 block_q: int = 128, block_m: int = 512,
                 use_kernel: bool = True, interpret=None):
@@ -75,8 +64,7 @@ def metric_topk(L, queries, gp, gn=None, *, k_top: int = 10,
 
     Returns (dists (Nq, k_top) f32 ascending, indices (Nq, k_top) int32).
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = default_interpret(interpret)
     Nq, d = queries.shape
     M, k = gp.shape
     if k_top > M:
@@ -87,17 +75,17 @@ def metric_topk(L, queries, gp, gn=None, *, k_top: int = 10,
         return metric_topk_xla(L, queries, gp, gn, k_top)
 
     # lane-align the contracted dims (zero pads are distance-neutral)
-    dP, kP = _round_up(d, 128), _round_up(k, 128)
-    qpad = _pad_axis(queries.astype(jnp.float32), dP, 1)
-    Lpad = _pad_axis(_pad_axis(L.astype(jnp.float32), dP, 1), kP, 0)
-    gpad = _pad_axis(gp.astype(jnp.float32), kP, 1)
+    dP, kP = round_up(d, LANE), round_up(k, LANE)
+    qpad = pad_axis(queries.astype(jnp.float32), dP, 1)
+    Lpad = pad_axis(pad_axis(L.astype(jnp.float32), dP, 1), kP, 0)
+    gpad = pad_axis(gp.astype(jnp.float32), kP, 1)
 
     # row tiles: queries sliced back after, gallery padded with BIG norms
-    bQ = block_q if Nq >= block_q else _round_up(Nq, 8)
-    bM = block_m if M >= block_m else _round_up(M, 128)
-    qpad = _pad_axis(qpad, _round_up(Nq, bQ), 0)
-    gpad = _pad_axis(gpad, _round_up(M, bM), 0)
-    gnpad = _pad_axis(gn.astype(jnp.float32), _round_up(M, bM), 0, value=BIG)
+    bQ = pick_block(Nq, block_q, SUBLANE)
+    bM = pick_block(M, block_m, LANE)
+    qpad = pad_axis(qpad, round_up(Nq, bQ), 0)
+    gpad = pad_axis(gpad, round_up(M, bM), 0)
+    gnpad = pad_axis(gn.astype(jnp.float32), round_up(M, bM), 0, value=BIG)
 
     dists, idxs = metric_topk_fused(qpad, Lpad, gpad, gnpad, k_top=k_top,
                                     block_q=bQ, block_m=bM,

@@ -1,0 +1,12 @@
+"""Fused PQ ADC segment scan: uint8 code gather + LUT accumulate + top-k.
+
+Kernel/ops/ref contract (docs/kernels.md): ``ops.pq_adc_topk`` is the
+public dispatcher; ``kernel.pq_adc_topk_fused`` the raw Pallas call;
+``ref.pq_adc_topk_ref`` the bit-exact XLA oracle serve/pq.py scans with.
+"""
+
+from repro.kernels.pq_adc.kernel import pq_adc_topk_fused
+from repro.kernels.pq_adc.ops import pq_adc_topk
+from repro.kernels.pq_adc.ref import pq_adc_topk_ref
+
+__all__ = ["pq_adc_topk", "pq_adc_topk_fused", "pq_adc_topk_ref"]

@@ -1,0 +1,68 @@
+"""Pure-XLA oracle for the fused PQ ADC segment scan.
+
+The semantics both the serving path (serve/pq.py IVFPQIndex) and the
+Pallas kernel (kernel.py) must reproduce **bit-for-bit**: gather each
+query's probed code segments, accumulate the per-subspace lookup-table
+inner products, apply the factored ADC identity
+
+    d = max(d_cent + t - 2 * sum_s LUT[s, code_s], 0)
+
+(d_cent = squared distance to the probed centroid, t = the baked
+||r̂||² + 2⟨c, r̂⟩ row term — see serve/pq.py for the derivation), and
+keep the kk best (distance, id) candidates.
+
+Two choices here are load-bearing for the bit-identity contract:
+
+  * the subspace sum is a **sequential** unrolled loop, not
+    ``.sum(axis=-1)`` — XLA may tree-reduce a sum over an axis, and the
+    kernel accumulates its per-subspace one-hot matmul terms in
+    subspace order, so the reference fixes the same rounding order;
+  * candidates flatten probe-major / slot-minor, the exact order the
+    kernel streams tiles in, so position-order tie-breaks agree.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels._dispatch import topk_by_distance
+
+
+def pq_adc_topk_ref(tables, dc, probes, codes, t, ids, kk: int):
+    """ADC-score the probed segments and keep the top kk per query.
+
+    Args:
+      tables: (Nq, S*K) flattened per-query inner-product LUTs (entry
+        [q, s*K + c] = <qp_q restricted to subspace s, codebook[s, c]>).
+      dc: (Nq, nprobe) squared centroid distances of the probed clusters.
+      probes: (Nq, nprobe) int32 probed cluster ids.
+      codes: (C, cap, S) uint8 segment codes (0 on pad slots).
+      t: (C, cap) f32 baked row terms (+BIG on pad slots).
+      ids: (C, cap) int32 global row ids (-1 on pad slots).
+      kk: candidates kept per query (<= nprobe * cap).
+
+    Returns (dists (Nq, kk) f32 ascending, ids (Nq, kk) int32), sorted
+    lexicographically by (distance, id). Pad slots score exactly BIG
+    (their t is +BIG, which swallows the small dc/ip terms in f32) and
+    surface — with id -1 — only when the probed segments hold fewer
+    than kk real rows.
+    """
+    Nq = tables.shape[0]
+    nprobe = probes.shape[1]
+    S = codes.shape[2]
+    K = tables.shape[1] // S
+    cg = jnp.take(codes, probes, axis=0)          # (Nq, np, cap, S) u8
+    tg = jnp.take(t, probes, axis=0)              # (Nq, np, cap)
+    ig = jnp.take(ids, probes, axis=0)
+    # flatten (s, code) -> s*K + code after the segment gather: the
+    # gather moves 1-byte codes and the table lookup is one fused
+    # take_along_axis over the small gathered block
+    offs = jnp.arange(S, dtype=jnp.int32) * K
+    fl = cg.astype(jnp.int32) + offs
+    picked = jnp.take_along_axis(tables, fl.reshape(Nq, -1), axis=1)
+    picked = picked.reshape(Nq, nprobe, cg.shape[2], S)
+    ip = picked[..., 0]
+    for s in range(1, S):                         # sequential: see module
+        ip = ip + picked[..., s]                  # docstring
+    d = jnp.maximum(dc[:, :, None] + tg - 2.0 * ip, 0.0)
+    return topk_by_distance(d.reshape(Nq, -1), ig.reshape(Nq, -1), kk)

@@ -18,8 +18,11 @@ product-quantization codes (``--n-subspaces`` codes of ``--bits`` bits
 per row, trained on residuals to the cluster centroids) scored by
 ADC lookup tables, with the top ``--rerank-depth`` candidates re-scored
 exactly against the full-precision store (``--pq-store host`` keeps that
-store in RAM instead of device memory). ``--cache-size`` bounds the
-engine's hot-query LRU (0 disables).
+store in RAM instead of device memory). ``--scan-impl`` picks the
+segment-scan implementation for both ANN indexes — "auto" serves the
+fused Pallas kernels (kernels/pq_adc, kernels/ivf_scan) on TPU and the
+XLA scan elsewhere. ``--cache-size`` bounds the engine's hot-query LRU
+(0 disables).
 
 ``--mutable`` wraps the index in a MutableIndex (streaming upserts /
 deletes / compaction / metric hot-swap); ``--churn N`` then exercises N
@@ -86,6 +89,12 @@ def main():
                     default="device",
                     help="ivfpq: where the full-precision rerank rows "
                          "live (host = RAM only, saves device memory)")
+    ap.add_argument("--scan-impl", choices=["auto", "xla", "pallas"],
+                    default="auto",
+                    help="ivf/ivfpq: segment-scan implementation — auto "
+                         "picks the fused Pallas kernel on TPU and XLA "
+                         "elsewhere; pallas forces the kernel (interpret "
+                         "mode off TPU, correctness only)")
     ap.add_argument("--cache-size", type=int, default=1024,
                     help="engine hot-query LRU entries (0 disables)")
     ap.add_argument("--mutable", action="store_true",
@@ -141,6 +150,9 @@ def main():
     if args.data > 1 and args.index == "ivfpq":
         ap.error("--index ivfpq is single-shard (incompatible with "
                  "--data > 1)")
+    if args.data > 1 and args.scan_impl == "pallas":
+        ap.error("--scan-impl pallas is single-shard (incompatible with "
+                 "--data > 1)")
     if args.churn and not args.mutable:
         ap.error("--churn requires --mutable")
 
@@ -181,7 +193,8 @@ def main():
 
     # --- serving stack ---------------------------------------------------
     mesh = make_local_mesh(data=args.data) if args.data > 1 else None
-    ivf_kw = dict(n_clusters=args.n_clusters, nprobe=args.nprobe)
+    ivf_kw = dict(n_clusters=args.n_clusters, nprobe=args.nprobe,
+                  scan_impl=args.scan_impl)
     ivfpq_kw = dict(ivf_kw, n_subspaces=args.n_subspaces, bits=args.bits,
                     rerank_depth=args.rerank_depth, store=args.pq_store)
     base_kw = {"exact": {}, "ivf": ivf_kw, "ivfpq": ivfpq_kw}[args.index]
@@ -218,11 +231,14 @@ def main():
           f"({index.n_shards} shard(s)), {verb} in {build_s:.2f}s")
     ivf = index.base if isinstance(index, MutableIndex) else index
     if isinstance(ivf, (IVFIndex, IVFPQIndex)):
+        from repro.serve import scan as scanmod
         scanned = ivf.nprobe * ivf.cap
+        resolved = scanmod.resolve_scan_impl(ivf.scan_impl)
         print(f"  {type(ivf).__name__}: {ivf.n_clusters} clusters, cap "
               f"{ivf.cap}, nprobe {ivf.nprobe} -> <= {scanned} of "
               f"{ivf.size} rows scanned per query "
-              f"({scanned / max(ivf.size, 1):.1%})")
+              f"({scanned / max(ivf.size, 1):.1%}); "
+              f"scan_impl={ivf.scan_impl} (resolves to {resolved})")
     if isinstance(ivf, IVFPQIndex):
         print(f"  pq: {ivf.pq.n_subspaces} x {ivf.pq.bits}-bit codes "
               f"({ivf.code_bytes_per_row} B/row scanned vs "
@@ -305,8 +321,14 @@ def main():
         for name, c in obs["classes"].items():
             print(f"  class {name}: admitted {c['admitted']} "
                   f"completed {c['completed']} expired {c['expired']} "
-                  f"rejected {c['rejected']} p50={c['p50_ms']:.2f}ms "
+                  f"rejected {c['rejected']} queue_depth "
+                  f"{c['queue_depth']} p50={c['p50_ms']:.2f}ms "
                   f"p99={c['p99_ms']:.2f}ms")
+        # end-of-run gauges: depths should have drained to 0 and the
+        # ladder recovered toward level 0 — nonzero values here mean the
+        # run ended under pressure
+        print(f"  gauges: total queue_depth {obs['queue_depth']}, "
+              f"ladder level {obs['degradation_level']}")
         print(f"  degradation: level {obs['degradation_level']} "
               f"knobs {obs['degradation_knobs']} "
               f"({obs['n_transitions']} transition(s)); "

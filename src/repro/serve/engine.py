@@ -211,7 +211,8 @@ class RetrievalEngine:
         index (class name), cache_hits / cache_misses / cache_entries.
         Backend extras appear when the index exposes them: delta_rows /
         tombstones / compactions (MutableIndex), code_bytes_per_row /
-        compression_ratio (IVFPQIndex). With a traffic front end attached
+        compression_ratio (IVFPQIndex), scan_impl (IVF/IVFPQ segment-scan
+        implementation knob). With a traffic front end attached
         (serve/scheduler.py), a ``frontend`` sub-dict adds per-class
         latency percentiles, queue depths, admission/rejection/expiry
         counters, and the current degradation level.
@@ -240,7 +241,8 @@ class RetrievalEngine:
                           ("tombstones", "tombstones"),
                           ("compactions", "n_compactions"),
                           ("code_bytes_per_row", "code_bytes_per_row"),
-                          ("compression_ratio", "compression_ratio")):
+                          ("compression_ratio", "compression_ratio"),
+                          ("scan_impl", "scan_impl")):
             value = getattr(self.index, attr, None)
             if value is not None:
                 out[key] = value

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.ivf_scan import ivf_scan_topk
 from repro.kernels.metric_topk import metric_sqdist_factored, project_gallery
 from repro.kernels.metric_topk.kernel import BIG
 from repro.kernels.pairwise_dist.ref import pairwise_sqdist_ref
@@ -194,6 +195,9 @@ class IVFIndex:
     nprobe: int                     # default clusters scanned per query
     n_rows: int                     # real (unpadded) gallery size M
     block_q: int = 16               # query chunk for the segment gather
+    # segment-scan implementation: "auto" (Pallas kernel on TPU, XLA
+    # elsewhere), "xla", or "pallas" (kernels/ivf_scan; single-shard only)
+    scan_impl: str = "auto"
     mesh: Optional[jax.sharding.Mesh] = None
     axes: Tuple[str, ...] = ()
     version: int = 0
@@ -202,7 +206,7 @@ class IVFIndex:
     @classmethod
     def build(cls, L, gallery, n_clusters: int = 64, nprobe: int = 8,
               *, iters: int = 10, seed: int = 0, cap_factor: float = 1.25,
-              mesh=None, rules=None) -> "IVFIndex":
+              scan_impl: str = "auto", mesh=None, rules=None) -> "IVFIndex":
         """Project the gallery, cluster it, lay out padded segments.
 
         ``cap_factor`` bounds segment capacity at ~cap_factor * M/C rows:
@@ -211,24 +215,31 @@ class IVFIndex:
         is nprobe * cap, so capping it keeps skewed galleries from paying
         the worst cluster's size on every probe; spilled rows are only
         found via their adoptive cluster (a bounded recall trade).
+        ``scan_impl`` picks the default segment-scan implementation —
+        "auto" (kernels/ivf_scan fused Pallas kernel on TPU, XLA
+        elsewhere), "xla", or "pallas" (overridable per topk call).
         """
         gp, gn = project_gallery(L, gallery)
         return cls.build_projected(L, gp, gn, n_clusters=n_clusters,
                                    nprobe=nprobe, iters=iters, seed=seed,
-                                   cap_factor=cap_factor, mesh=mesh,
+                                   cap_factor=cap_factor,
+                                   scan_impl=scan_impl, mesh=mesh,
                                    rules=rules)
 
     @classmethod
     def build_projected(cls, L, gp, gn, n_clusters: int = 64,
                         nprobe: int = 8, *, iters: int = 10, seed: int = 0,
-                        cap_factor: float = 1.25, mesh=None,
-                        rules=None) -> "IVFIndex":
+                        cap_factor: float = 1.25, scan_impl: str = "auto",
+                        mesh=None, rules=None) -> "IVFIndex":
         """Cluster + lay out already-projected rows (gp (M,k), gn (M,)).
 
         The compaction-triggered rebuild and metric hot-swap
         (serve/mutable.py) enter here: they already hold projected rows
         and must not pay a second gallery projection.
         """
+        if scan_impl not in scan.SCAN_IMPLS:
+            raise ValueError(f"unknown scan_impl {scan_impl!r} "
+                             f"({'|'.join(scan.SCAN_IMPLS)})")
         gp = jnp.asarray(gp, jnp.float32)
         gn = jnp.asarray(gn, jnp.float32)
         M, k = gp.shape
@@ -270,7 +281,8 @@ class IVFIndex:
             centroids = scan.put_replicated(mesh, centroids)
         return cls(L=jnp.asarray(L), centroids=centroids, gp_pad=gp_pad,
                    gn_pad=gn_pad, ids_pad=ids_pad, cap=cap, n_clusters=C,
-                   nprobe=min(nprobe, C), n_rows=M, mesh=mesh, axes=axes)
+                   nprobe=min(nprobe, C), n_rows=M, scan_impl=scan_impl,
+                   mesh=mesh, axes=axes)
 
     @property
     def size(self) -> int:
@@ -283,7 +295,8 @@ class IVFIndex:
         return scan.n_shards(self.mesh, self.axes)
 
     def topk(self, queries, k_top: int, backend: str = "xla",
-             nprobe: Optional[int] = None):
+             nprobe: Optional[int] = None,
+             scan_impl: Optional[str] = None):
         """Approximate k nearest gallery rows per query.
 
         Args:
@@ -293,6 +306,11 @@ class IVFIndex:
           backend: "xla" only.
           nprobe: clusters scanned per query (defaults to the build-time
             setting; ``n_clusters`` scans everything = exact).
+          scan_impl: segment-scan implementation for this call — "auto" /
+            "xla" / "pallas" (defaults to the build setting; see
+            scan.resolve_scan_impl). "pallas" requires a single-shard
+            index; ids match the xla path exactly, distances to f32
+            rounding.
 
         Returns (dists (Nq, k_top) f32 ascending, global row indices
         (Nq, k_top) int32); -1 ids mark under-filled probes (raise
@@ -313,16 +331,22 @@ class IVFIndex:
             raise ValueError(
                 f"k_top={k_top} > nprobe*cap={np_ * self.cap} scanned "
                 f"rows per query; raise nprobe")
-        fn = self._fns.get((k_top, np_))
+        impl = scan.resolve_scan_impl(self.scan_impl, scan_impl)
+        if impl == "pallas" and self.n_shards > 1:
+            raise NotImplementedError(
+                "scan_impl='pallas' is single-shard only (the fused "
+                "kernel does not compose with shard_map yet)")
+        key = (k_top, np_, impl)
+        fn = self._fns.get(key)
         if fn is None:
             build = (self._build_topk_sharded if self.n_shards > 1
                      else self._build_topk)
-            fn = self._fns[(k_top, np_)] = build(k_top, np_)
+            fn = self._fns[key] = build(k_top, np_, impl)
         return fn(queries)
 
     # -- single-device query path -------------------------------------------
 
-    def _build_topk(self, k_top: int, nprobe: int):
+    def _build_topk(self, k_top: int, nprobe: int, impl: str):
         C, cap = self.n_clusters, self.cap
         k = self.centroids.shape[1]
         g = self.gp_pad.reshape(C, cap, k)
@@ -333,14 +357,19 @@ class IVFIndex:
         def run(queries):
             qp = scan.project_queries(self.L, queries)
             probes = self._probe(qp, nprobe)
-            return _probed_topk(qp, probes, g, gn, ids, k_top,
-                                self.block_q)
+            return ivf_scan_topk(qp, probes, g, gn, ids, kk=k_top,
+                                 block_q=self.block_q,
+                                 use_kernel=(impl == "pallas"))
 
         return run
 
     # -- sharded query path (whole clusters per shard) -----------------------
 
-    def _build_topk_sharded(self, k_top: int, nprobe: int):
+    def _build_topk_sharded(self, k_top: int, nprobe: int, impl: str):
+        # impl is always "xla" here (topk rejects pallas when sharded);
+        # the per-shard body below is the same pure-jnp reference the
+        # single-device xla path runs, via kernels/ivf_scan.
+        del impl
         C, cap = self.n_clusters, self.cap
         C_loc = C // self.n_shards
         kk = min(k_top, nprobe * cap)
@@ -379,41 +408,13 @@ class IVFIndex:
         return probes.astype(jnp.int32)
 
 
-def _gathered_candidates(qp, cluster_slots, g, gn, ids):
-    """Score the gathered segments of each query's probed clusters.
-
-    qp (Nq, k); cluster_slots (Nq, nprobe) indices into the leading dim of
-    g (C', cap, k) / gn (C', cap) / ids (C', cap). Returns flattened
-    (dists (Nq, nprobe*cap), ids (Nq, nprobe*cap)) candidates.
-    """
-    gg = jnp.take(g, cluster_slots, axis=0, mode="clip")   # (Nq, np, cap, k)
-    gng = jnp.take(gn, cluster_slots, axis=0, mode="clip")  # (Nq, np, cap)
-    idg = jnp.take(ids, cluster_slots, axis=0, mode="clip")
-    qn = jnp.sum(jnp.square(qp), axis=1)
-    cross = jnp.einsum("qpck,qk->qpc", gg, qp)
-    d = jnp.maximum(qn[:, None, None] + gng - 2.0 * cross, 0.0)
-    Nq = qp.shape[0]
-    return d.reshape(Nq, -1), idg.reshape(Nq, -1)
-
-
 def _probed_topk(qp, cluster_slots, g, gn, ids, kk: int, block_q: int):
-    """Top-kk candidates per query from its probed segments, chunked over
-    queries with lax.map so the gathered (block_q, nprobe, cap, k)
-    intermediate stays cache-sized — the monolithic gather falls off a
-    bandwidth cliff once it outgrows LLC. Selection runs inside each
-    chunk, so nothing larger than (Nq, kk) ever leaves the loop."""
-    Nq, k = qp.shape
-    nprobe = cluster_slots.shape[1]
-    B = min(block_q, Nq)
-    Np = ((Nq + B - 1) // B) * B
-    qp_p = jnp.pad(qp, ((0, Np - Nq), (0, 0)))
-    slots_p = jnp.pad(cluster_slots, ((0, Np - Nq), (0, 0)))
+    """Top-kk candidates per query from its probed segments.
 
-    def blk(args):
-        q, s = args
-        d, i = _gathered_candidates(q, s, g, gn, ids)
-        return scan.topk_by_distance(d, i, kk)
-
-    d, i = jax.lax.map(blk, (qp_p.reshape(-1, B, k),
-                             slots_p.reshape(-1, B, nprobe)))
-    return d.reshape(Np, kk)[:Nq], i.reshape(Np, kk)[:Nq]
+    Thin alias for ``kernels.ivf_scan.ivf_scan_topk(use_kernel=False)``
+    — the chunked XLA reference scan, which is also the pure-jnp
+    per-shard body the sharded path runs inside shard_map (the appended
+    all-sentinel cluster at slot C_loc is reached via the reference's
+    ``mode="clip"`` gathers)."""
+    return ivf_scan_topk(qp, cluster_slots, g, gn, ids, kk=kk,
+                         block_q=block_q, use_kernel=False)

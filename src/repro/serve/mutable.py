@@ -197,6 +197,12 @@ class MutableIndex:
         return getattr(self.base, "compression_ratio", None)
 
     @property
+    def scan_impl(self):
+        """Forwarded from an IVF/IVFPQ base (None for exact) so engine
+        stats() reports which segment-scan implementation serves."""
+        return getattr(self.base, "scan_impl", None)
+
+    @property
     def tombstones(self) -> int:
         """Dead slots awaiting compaction (base + delta)."""
         return int(self.dead_base.sum() + self.dead_delta.sum())
@@ -593,7 +599,8 @@ class MutableIndex:
         def rebuild(gp, gn):
             self.base = IVFIndex.build_projected(
                 self.L, gp, gn, n_clusters=base.n_clusters,
-                nprobe=base.nprobe, **self._rebuild_kwargs())
+                nprobe=base.nprobe, scan_impl=base.scan_impl,
+                **self._rebuild_kwargs())
 
         def remake(ids_pad, new_ids, lb, live_d, order):
             self.base = IVFIndex(
@@ -601,7 +608,8 @@ class MutableIndex:
                 gp_pad=jnp.asarray(gp_pad), gn_pad=jnp.asarray(gn_pad),
                 ids_pad=jnp.asarray(ids_pad), cap=base.cap,
                 n_clusters=base.n_clusters, nprobe=base.nprobe,
-                n_rows=len(new_ids), block_q=base.block_q)
+                n_rows=len(new_ids), block_q=base.block_q,
+                scan_impl=base.scan_impl)
 
         self._fold_segments(clear_dead, place_delta, rebuild, remake)
 
@@ -633,7 +641,8 @@ class MutableIndex:
                 self.L, gp, gn, n_clusters=base.n_clusters,
                 nprobe=base.nprobe, n_subspaces=base.pq.n_subspaces,
                 bits=base.pq.bits, rerank_depth=base.rerank_depth,
-                store=base.store, **self._rebuild_kwargs())
+                store=base.store, scan_impl=base.scan_impl,
+                **self._rebuild_kwargs())
 
         def remake(ids_pad, new_ids, lb, live_d, order):
             gp_full = np.concatenate([base.gp_full[lb],
@@ -647,7 +656,8 @@ class MutableIndex:
                 gp_full=gp_full, gn_full=gn_full, cap=base.cap,
                 n_clusters=base.n_clusters, nprobe=base.nprobe,
                 n_rows=len(new_ids), rerank_depth=base.rerank_depth,
-                store=base.store, block_q=base.block_q)
+                store=base.store, scan_impl=base.scan_impl,
+                block_q=base.block_q)
 
         self._fold_segments(clear_dead, place_delta, rebuild, remake)
 
@@ -697,11 +707,13 @@ class MutableIndex:
                 n_subspaces=self.base.pq.n_subspaces,
                 bits=self.base.pq.bits,
                 rerank_depth=self.base.rerank_depth,
-                store=self.base.store, **self._rebuild_kwargs())
+                store=self.base.store, scan_impl=self.base.scan_impl,
+                **self._rebuild_kwargs())
         elif isinstance(self.base, IVFIndex):
             new_base = IVFIndex.build_projected(
                 L_new, gp, gn, n_clusters=self.base.n_clusters,
-                nprobe=self.base.nprobe, **self._rebuild_kwargs())
+                nprobe=self.base.nprobe, scan_impl=self.base.scan_impl,
+                **self._rebuild_kwargs())
         else:
             new_base = ExactIndex.from_projected(L_new, gp, gn)
         # the flip: nothing above mutated served state

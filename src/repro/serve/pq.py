@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.kernels.metric_topk import metric_sqdist_factored, project_gallery
 from repro.kernels.metric_topk.kernel import BIG
+from repro.kernels.pq_adc import pq_adc_topk
 from repro.serve import scan
 from repro.serve.ivf import _balance_assign, kmeans_projected
 
@@ -261,6 +262,10 @@ class IVFPQIndex:
     n_rows: int                     # real (unpadded) gallery size M
     rerank_depth: int = 50          # default exact-rerank pool (0 = off)
     store: str = "device"           # rerank row store: "device" | "host"
+    # ADC segment-scan implementation: "auto" (Pallas kernel on TPU, XLA
+    # elsewhere), "xla", or "pallas" (kernels/pq_adc; interpret mode off
+    # TPU — a correctness tool, not a serving path)
+    scan_impl: str = "auto"
     # query chunk for the segment gather; 4x the IVF default because the
     # gathered code blocks are ~16x smaller than full-precision rows, so
     # bigger chunks stay cache-sized and amortize per-block overhead
@@ -274,7 +279,8 @@ class IVFPQIndex:
     @classmethod
     def build(cls, L, gallery, n_clusters: int = 64, nprobe: int = 8, *,
               n_subspaces: int = 8, bits: int = 8, rerank_depth: int = 50,
-              store: str = "device", iters: int = 10, seed: int = 0,
+              store: str = "device", scan_impl: str = "auto",
+              iters: int = 10, seed: int = 0,
               cap_factor: float = 1.25, mesh=None,
               rules=None) -> "IVFPQIndex":
         """Project the gallery, cluster, train PQ on residuals, encode.
@@ -291,6 +297,9 @@ class IVFPQIndex:
           store: where the full-precision rerank rows live — "device"
             (fused in-jit rerank, f32 rows stay in HBM) or "host" (RAM
             only; a host gather round trip per reranked batch).
+          scan_impl: default ADC segment-scan implementation — "auto"
+            (kernels/pq_adc fused Pallas kernel on TPU, XLA elsewhere),
+            "xla", or "pallas" (overridable per topk call).
           mesh/rules: accepted for API symmetry; a multi-device mesh
             raises (single-shard backend, see module docstring).
 
@@ -300,14 +309,15 @@ class IVFPQIndex:
         return cls.build_projected(
             L, gp, gn, n_clusters=n_clusters, nprobe=nprobe,
             n_subspaces=n_subspaces, bits=bits, rerank_depth=rerank_depth,
-            store=store, iters=iters, seed=seed, cap_factor=cap_factor,
-            mesh=mesh, rules=rules)
+            store=store, scan_impl=scan_impl, iters=iters, seed=seed,
+            cap_factor=cap_factor, mesh=mesh, rules=rules)
 
     @classmethod
     def build_projected(cls, L, gp, gn, n_clusters: int = 64,
                         nprobe: int = 8, *, n_subspaces: int = 8,
                         bits: int = 8, rerank_depth: int = 50,
-                        store: str = "device", iters: int = 10,
+                        store: str = "device", scan_impl: str = "auto",
+                        iters: int = 10,
                         seed: int = 0, cap_factor: float = 1.25,
                         pq_train_rows: int = 20_000, mesh=None,
                         rules=None) -> "IVFPQIndex":
@@ -324,6 +334,9 @@ class IVFPQIndex:
         """
         if store not in ("device", "host"):
             raise ValueError(f"unknown store {store!r} (device|host)")
+        if scan_impl not in scan.SCAN_IMPLS:
+            raise ValueError(f"unknown scan_impl {scan_impl!r} "
+                             f"({'|'.join(scan.SCAN_IMPLS)})")
         if mesh is not None and scan.n_shards(
                 mesh, scan.gallery_axes(mesh, None, rules)) > 1:
             raise NotImplementedError(
@@ -373,7 +386,8 @@ class IVFPQIndex:
                    t_pad=jnp.asarray(t_pad), ids_pad=jnp.asarray(ids_pad),
                    gp_full=gp_np, gn_full=np.asarray(gn), cap=cap,
                    n_clusters=C, nprobe=min(nprobe, C), n_rows=M,
-                   rerank_depth=rerank_depth, store=store)
+                   rerank_depth=rerank_depth, store=store,
+                   scan_impl=scan_impl)
 
     # -- MetricIndex surface -------------------------------------------------
 
@@ -400,13 +414,16 @@ class IVFPQIndex:
 
     def topk(self, queries, k_top: int, backend: str = "xla",
              nprobe: Optional[int] = None,
-             rerank: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+             rerank: Optional[int] = None,
+             scan_impl: Optional[str] = None
+             ) -> Tuple[jax.Array, jax.Array]:
         """(dists (Nq, k_top) ascending, global row ids (Nq, k_top)).
 
         Args:
           queries: (Nq, d) raw queries (projected through L here).
           k_top: neighbors per query (<= size).
-          backend: "xla" only (no fused-kernel or sharded path).
+          backend: "xla" only (no sharded path; the fused ADC kernel is
+            the ``scan_impl`` knob, not an engine backend).
           nprobe: clusters scanned (defaults to the build setting;
             ``n_clusters`` scans everything).
           rerank: exact-rerank pool (defaults to build ``rerank_depth``;
@@ -414,6 +431,10 @@ class IVFPQIndex:
             candidates against the full-precision row store — device or
             host per ``store`` — and returns exact distances for the
             survivors).
+          scan_impl: ADC segment-scan implementation for this call —
+            "auto" / "xla" / "pallas" (defaults to the build setting;
+            see scan.resolve_scan_impl). The pallas path returns
+            bit-identical results to the xla path.
 
         Invariants: with rerank on, returned distances are exact squared
         metric distances for the returned ids. Ids match ExactIndex when
@@ -444,12 +465,14 @@ class IVFPQIndex:
             raise ValueError(
                 f"k_top={k_top} > nprobe*cap={np_ * self.cap} scanned "
                 f"rows per query; raise nprobe")
+        impl = scan.resolve_scan_impl(self.scan_impl, scan_impl)
         queries = jnp.asarray(queries, jnp.float32)
         fused = rr > 0 and self.store == "device"
-        key = (k_top, np_, rr, fused)
+        key = (k_top, np_, rr, fused, impl)
         fn = self._fns.get(key)
         if fn is None:
-            fn = self._fns[key] = self._build_topk(k_top, np_, rr, fused)
+            fn = self._fns[key] = self._build_topk(k_top, np_, rr, fused,
+                                                   impl)
         if fused or rr == 0:
             return fn(queries)
         # host store: two-phase rerank (the scan fn hands back the
@@ -466,13 +489,17 @@ class IVFPQIndex:
                                jnp.asarray(self.gn_full))
         return self._dev_store
 
-    def _build_topk(self, k_top: int, nprobe: int, rr: int, fused: bool):
-        """Jitted query fn for one (k_top, nprobe, rerank, store) combo.
+    def _build_topk(self, k_top: int, nprobe: int, rr: int, fused: bool,
+                    impl: str):
+        """Jitted query fn for one (k_top, nprobe, rerank, store, impl)
+        combo.
 
         ``fused`` appends the device-store exact rerank inside the same
         jit; otherwise the fn returns the top max(k_top, rr) ADC
         candidates — plus the projected queries when rr > 0, for the
-        host-store rerank phase that follows.
+        host-store rerank phase that follows. ``impl`` is the resolved
+        segment-scan implementation ("xla" | "pallas"); both route
+        through kernels/pq_adc and return bit-identical results.
         """
         C, cap = self.n_clusters, self.cap
         S, K = self.pq.n_subspaces, self.pq.n_codes
@@ -489,37 +516,9 @@ class IVFPQIndex:
             cd = metric_sqdist_factored(qp, self.centroids)
             neg, probes = jax.lax.top_k(-cd, nprobe)
             tables = self.pq.ip_tables(qp).reshape(qp.shape[0], S * K)
-
-            Nq = qp.shape[0]
-            B = min(block_q, Nq)
-            Np = ((Nq + B - 1) // B) * B
-            pad = ((0, Np - Nq), (0, 0))
-
-            # flatten (s, code) -> s*K + code *after* the segment gather:
-            # the gather moves 1-byte codes, the offset add runs on the
-            # small gathered block, and the table lookup is one fused
-            # take_along_axis (see ProductQuantizer.adc)
-            offs = jnp.arange(S, dtype=jnp.int32) * K
-
-            def blk(args):
-                tab, s, dc = args
-                cg = jnp.take(codes, s, axis=0)      # (B, np, cap, S) u8
-                tg = jnp.take(t, s, axis=0)          # (B, np, cap)
-                ig = jnp.take(ids, s, axis=0)
-                fl = cg.astype(jnp.int32) + offs
-                picked = jnp.take_along_axis(
-                    tab, fl.reshape(B, -1), axis=1)  # fused table gather
-                ip = picked.reshape(B, nprobe, cap, S).sum(axis=3)
-                d = jnp.maximum(dc[:, :, None] + tg - 2.0 * ip, 0.0)
-                return scan.topk_by_distance(d.reshape(B, -1),
-                                             ig.reshape(B, -1), kk)
-
-            d, i = jax.lax.map(blk, (
-                jnp.pad(tables, pad).reshape(-1, B, S * K),
-                jnp.pad(probes, pad).reshape(-1, B, nprobe),
-                jnp.pad(-neg, pad).reshape(-1, B, nprobe)))
-            d = d.reshape(Np, kk)[:Nq]
-            i = i.reshape(Np, kk)[:Nq]
+            d, i = pq_adc_topk(tables, -neg, probes, codes, t, ids,
+                               kk=kk, block_q=block_q,
+                               use_kernel=(impl == "pallas"))
             if not fused:
                 return (d, i, qp) if rr > 0 else (d, i)
             # fused exact rerank: gather only kk full-precision rows per

@@ -29,12 +29,35 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.kernels import _dispatch
 from repro.sharding import partition
 
 
 def project_queries(L, queries):
     """Project raw (Nq, d) queries into the k-dim metric space (f32)."""
     return queries.astype(jnp.float32) @ L.astype(jnp.float32).T
+
+
+SCAN_IMPLS = ("auto", "xla", "pallas")
+
+
+def resolve_scan_impl(default: str, override=None) -> str:
+    """Resolve a segment-scan implementation knob to "xla" or "pallas".
+
+    ``default`` is the index's build-time setting; ``override`` a
+    per-call value (None defers to the default — ``is None``, never
+    truthiness, so an explicit empty/0 value raises instead of silently
+    remapping, the k_top=0 bug class). "auto" picks the fused Pallas
+    kernel when the runtime backend is a TPU and the XLA path elsewhere
+    (interpret-mode Pallas is a correctness tool, not a serving path).
+    """
+    impl = default if override is None else override
+    if impl not in SCAN_IMPLS:
+        raise ValueError(f"unknown scan_impl {impl!r} "
+                         f"({'|'.join(SCAN_IMPLS)})")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return impl
 
 
 def recall_at_k(approx_ids, exact_ids) -> float:
@@ -117,10 +140,12 @@ def topk_by_distance(d, ids, k_top: int):
     so on galleries with exactly duplicated rows the returned member of a
     tied tail may differ between backends (distances are still correct;
     distinct real-valued distances are unaffected).
+
+    Delegates to kernels/_dispatch.py — the one copy of the contract the
+    Pallas segment-scan kernels and their XLA references must reproduce
+    bit-for-bit.
     """
-    neg, pos = jax.lax.top_k(-d, k_top)
-    cd, ci = -neg, jnp.take_along_axis(ids, pos, axis=-1)
-    return jax.lax.sort((cd, ci), dimension=-1, num_keys=2)
+    return _dispatch.topk_by_distance(d, ids, k_top)
 
 
 def build_sharded_topk(mesh: Mesh, axes: Tuple[str, ...],

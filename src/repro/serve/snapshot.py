@@ -83,7 +83,8 @@ def _base_payload(index):
                  "ids_pad": np.asarray(index.ids_pad)},
                 {"base_type": "ivf", "cap": index.cap,
                  "n_clusters": index.n_clusters, "nprobe": index.nprobe,
-                 "n_rows": index.n_rows, "block_q": index.block_q})
+                 "n_rows": index.n_rows, "block_q": index.block_q,
+                 "scan_impl": index.scan_impl})
     if isinstance(index, IVFPQIndex):
         return ({"L": np.asarray(index.L),
                  "centroids": np.asarray(index.centroids),
@@ -98,7 +99,7 @@ def _base_payload(index):
                  "n_rows": index.n_rows, "block_q": index.block_q,
                  "pq_dim": index.pq.dim,
                  "rerank_depth": index.rerank_depth,
-                 "store": index.store})
+                 "store": index.store, "scan_impl": index.scan_impl})
     raise TypeError(f"cannot snapshot {type(index).__name__}")
 
 
@@ -121,14 +122,16 @@ def _load_base(path: str, meta: dict):
             cap=int(meta["cap"]), n_clusters=int(meta["n_clusters"]),
             nprobe=int(meta["nprobe"]), n_rows=int(meta["n_rows"]),
             rerank_depth=int(meta["rerank_depth"]),
-            store=str(meta["store"]), block_q=int(meta["block_q"]))
+            store=str(meta["store"]), block_q=int(meta["block_q"]),
+            scan_impl=str(meta.get("scan_impl", "auto")))
     return IVFIndex(
         L=L, centroids=jnp.asarray(arrays["centroids"]),
         gp_pad=jnp.asarray(arrays["gp_pad"]),
         gn_pad=jnp.asarray(arrays["gn_pad"]),
         ids_pad=jnp.asarray(arrays["ids_pad"]), cap=int(meta["cap"]),
         n_clusters=int(meta["n_clusters"]), nprobe=int(meta["nprobe"]),
-        n_rows=int(meta["n_rows"]), block_q=int(meta["block_q"]))
+        n_rows=int(meta["n_rows"]), block_q=int(meta["block_q"]),
+        scan_impl=str(meta.get("scan_impl", "auto")))
 
 
 def save_index(index, snapshot_dir: str) -> dict:
