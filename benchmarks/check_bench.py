@@ -1,4 +1,4 @@
-"""CI gate: fail if a fresh BENCH_*.json regresses QPS vs the committed one.
+"""CI gate: fail if a fresh BENCH_*.json regresses vs the committed one.
 
 Run after the benchmark --smoke steps have rewritten the BENCH_*.json
 files in the repo root:
@@ -6,15 +6,28 @@ files in the repo root:
     PYTHONPATH=src python benchmarks/check_bench.py [--threshold 0.8]
 
 For every ``BENCH_*.json`` in the working tree, the committed baseline
-is read from ``git show HEAD:<file>``; every numeric whose key starts
-with ``qps`` is compared *pathwise* (same nested location in both
-payloads — list entries pair by index). A fresh value below
-``threshold`` x baseline fails the run; new files, new keys, and
-structural mismatches (a resized sweep) are reported but never fail —
-only a like-for-like throughput drop does. The threshold is loose (20%)
-on purpose: CI runners are noisy, and the gate exists to catch
-order-of-magnitude faceplants (a kernel silently falling back to a slow
-path), not single-digit jitter.
+is read from ``git show HEAD:<file>`` and compared *pathwise* (same
+nested location in both payloads — list entries pair by index). Three
+key families are gated:
+
+  ``qps*``              higher is better: fail below
+                        ``threshold`` x baseline;
+  ``cache_hit_rate*``   higher is better, same ratio rule (the obs
+                        blocks the benchmarks embed from the unified
+                        MetricsRegistry) — a cache that silently stops
+                        hitting is a serving regression even when raw
+                        QPS holds;
+  ``queue_depth*``      lower is better: fail above
+                        baseline / threshold + 1 (the +1 is absolute
+                        slack so a 0 -> 1 blip on a drained queue does
+                        not fail).
+
+New files, new keys, and structural mismatches (a resized sweep) are
+reported but never fail — only a like-for-like regression does. The
+threshold is loose (20%) on purpose: CI runners are noisy, and the gate
+exists to catch order-of-magnitude faceplants (a kernel silently
+falling back to a slow path, a cache key that stopped matching), not
+single-digit jitter.
 """
 
 from __future__ import annotations
@@ -28,21 +41,27 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# key-prefix -> direction ("up" = higher is better)
+GATED = (("qps", "up"), ("cache_hit_rate", "up"), ("queue_depth", "down"))
 
-def iter_qps(node, path=""):
-    """Yield (json-path, value) for every numeric under a qps* key."""
+
+def iter_gated(node, path=""):
+    """Yield (json-path, value, direction) for every gated numeric."""
     if isinstance(node, dict):
         for k in sorted(node):
             sub = f"{path}.{k}" if path else k
             v = node[k]
-            if (k.startswith("qps") and isinstance(v, (int, float))
+            direction = next((d for p, d in GATED if k.startswith(p)),
+                             None)
+            if (direction is not None
+                    and isinstance(v, (int, float))
                     and not isinstance(v, bool)):
-                yield sub, float(v)
+                yield sub, float(v), direction
             else:
-                yield from iter_qps(v, sub)
+                yield from iter_gated(v, sub)
     elif isinstance(node, list):
         for i, v in enumerate(node):
-            yield from iter_qps(v, f"{path}[{i}]")
+            yield from iter_gated(v, f"{path}[{i}]")
 
 
 def baseline(relpath: str):
@@ -56,6 +75,17 @@ def baseline(relpath: str):
     return json.loads(blob)
 
 
+def regressed(was: float, now: float, direction: str,
+              threshold: float) -> bool:
+    """The gate rule for one pathwise pair."""
+    if direction == "up":
+        if was <= 0:                    # nothing to hold a ratio against
+            return False
+        return now / was < threshold
+    # "down": lower is better; +1 absolute slack covers 0-baselines
+    return now > was / threshold + 1.0
+
+
 def main(threshold: float) -> int:
     failures = []
     checked = 0
@@ -67,25 +97,26 @@ def main(threshold: float) -> int:
             continue
         with open(path) as f:
             new = json.load(f)
-        old_qps = dict(iter_qps(old))
-        new_qps = dict(iter_qps(new))
-        for key, was in sorted(old_qps.items()):
-            now = new_qps.get(key)
+        old_vals = {k: (v, d) for k, v, d in iter_gated(old)}
+        new_vals = {k: v for k, v, _ in iter_gated(new)}
+        for key, (was, direction) in sorted(old_vals.items()):
+            now = new_vals.get(key)
             if now is None:         # resized sweep / renamed section
                 print(f"{rel}: {key} absent in fresh run "
-                      f"(was {was:.0f}), skipping")
+                      f"(was {was:.3g}), skipping")
                 continue
             checked += 1
-            ratio = now / was if was > 0 else float("inf")
-            mark = "FAIL" if ratio < threshold else "ok"
-            print(f"{rel}: {key}: {was:.0f} -> {now:.0f} qps "
-                  f"({ratio:.2f}x)  [{mark}]")
-            if ratio < threshold:
+            bad = regressed(was, now, direction, threshold)
+            arrow = "^" if direction == "up" else "v"
+            mark = "FAIL" if bad else "ok"
+            print(f"{rel}: {key}: {was:.3g} -> {now:.3g} "
+                  f"[{arrow} {mark}]")
+            if bad:
                 failures.append((rel, key, was, now))
-    print(f"\nchecked {checked} qps figure(s), {len(failures)} below "
-          f"{threshold:.0%} of baseline")
+    print(f"\nchecked {checked} gated figure(s), {len(failures)} "
+          f"regression(s) at threshold {threshold:.0%}")
     for rel, key, was, now in failures:
-        print(f"  REGRESSION {rel}: {key} {was:.0f} -> {now:.0f}")
+        print(f"  REGRESSION {rel}: {key} {was:.3g} -> {now:.3g}")
     return 1 if failures else 0
 
 

@@ -1,0 +1,254 @@
+"""CI gate: schema-validate obs artifacts (metrics snapshots + traces).
+
+Run after a serving run has exported its observability artifacts:
+
+    PYTHONPATH=src python -m repro.launch.serve_retrieval ... \
+        --metrics-out metrics.json --trace-out traces.jsonl \
+        --trace-sample 1.0
+    PYTHONPATH=src python benchmarks/check_obs.py \
+        --metrics metrics.json --traces traces.jsonl
+
+With no arguments it validates the ``obs.registry`` snapshot blocks
+embedded in the committed ``BENCH_*.json`` payloads, so plain
+``python benchmarks/check_obs.py`` is a valid CI step on its own.
+
+What is checked (schema, not values — check_bench.py gates values):
+
+  metrics snapshot   top-level ``{"t", "counters", "gauges",
+                     "histograms", "events"}``; every instrument has
+                     ``help``/``labels``/``values``; every label key
+                     parses back to exactly the declared label names;
+                     histogram cells carry ``len(buckets) + 1`` counts
+                     whose sum equals ``count``; buckets ascend;
+                     events are ``{"t", "event", ...}`` in time order.
+  trace JSONL        one JSON object per line with ``trace_id`` and a
+                     ``root`` span; spans recursively carry
+                     ``name``/``t_start``/``t_end``/``attrs``/
+                     ``children`` with ``t_end >= t_start`` and children
+                     nested inside the parent's window; at least one
+                     trace must cover the end-to-end request path
+                     (request -> queue -> engine -> device_topk).
+
+Exit 0 when everything validates, 1 with a findings list otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.obs.metrics import parse_label_key      # noqa: E402
+from repro.obs.trace import span_names             # noqa: E402
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# span names every full request trace must include, in depth-first
+# order (other spans may interleave): the ISSUE's acceptance path.
+REQUEST_PATH = ("request", "queue", "engine", "device_topk")
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_snapshot(snap: dict, where: str) -> list:
+    """Return a list of problem strings (empty = valid)."""
+    bad = []
+
+    def err(msg):
+        bad.append(f"{where}: {msg}")
+
+    if not isinstance(snap, dict):
+        return [f"{where}: snapshot is {type(snap).__name__}, not dict"]
+    for key in ("t", "counters", "gauges", "histograms", "events"):
+        if key not in snap:
+            err(f"missing top-level key {key!r}")
+    if bad:
+        return bad
+    if not _is_num(snap["t"]):
+        err(f"t is {snap['t']!r}, not a number")
+
+    def check_instrument(kind, name, m):
+        for key in ("help", "labels", "values"):
+            if key not in m:
+                err(f"{kind}[{name}] missing {key!r}")
+                return
+        declared = m["labels"]
+        if not isinstance(declared, list):
+            err(f"{kind}[{name}] labels is not a list")
+            return
+        for lkey in m["values"]:
+            parsed = parse_label_key(lkey)
+            if sorted(parsed) != sorted(declared):
+                err(f"{kind}[{name}] label key {lkey!r} parses to "
+                    f"{sorted(parsed)}, declared {sorted(declared)}")
+
+    for kind in ("counters", "gauges"):
+        for name, m in snap[kind].items():
+            check_instrument(kind, name, m)
+            for lkey, v in m.get("values", {}).items():
+                if not _is_num(v):
+                    err(f"{kind}[{name}][{lkey!r}] value {v!r} "
+                        f"is not a number")
+                elif kind == "counters" and v < 0:
+                    err(f"counters[{name}][{lkey!r}] is negative ({v})")
+
+    for name, m in snap["histograms"].items():
+        check_instrument("histograms", name, m)
+        buckets = m.get("buckets")
+        if not isinstance(buckets, list) or not buckets:
+            err(f"histograms[{name}] has no buckets")
+            continue
+        if buckets != sorted(buckets) or len(set(buckets)) != len(buckets):
+            err(f"histograms[{name}] buckets not ascending+unique")
+        if any(math.isinf(b) for b in buckets):
+            err(f"histograms[{name}] buckets contain inf (the overflow "
+                f"bucket is implicit)")
+        for lkey, cell in m.get("values", {}).items():
+            for key in ("counts", "sum", "count"):
+                if key not in cell:
+                    err(f"histograms[{name}][{lkey!r}] missing {key!r}")
+            counts = cell.get("counts", [])
+            if len(counts) != len(buckets) + 1:
+                err(f"histograms[{name}][{lkey!r}] has {len(counts)} "
+                    f"counts for {len(buckets)} buckets "
+                    f"(want len(buckets) + 1)")
+            if sum(counts) != cell.get("count"):
+                err(f"histograms[{name}][{lkey!r}] counts sum "
+                    f"{sum(counts)} != count {cell.get('count')}")
+            if any((not isinstance(c, int)) or c < 0 for c in counts):
+                err(f"histograms[{name}][{lkey!r}] counts must be "
+                    f"non-negative ints")
+
+    last_t = -math.inf
+    for i, e in enumerate(snap["events"]):
+        if not isinstance(e, dict) or "t" not in e or "event" not in e:
+            err(f"events[{i}] lacks t/event: {e!r}")
+            continue
+        if e["t"] < last_t:
+            err(f"events[{i}] out of time order "
+                f"({e['t']} after {last_t})")
+        last_t = e["t"]
+    return bad
+
+
+def check_span(span, where: str, parent_window=None) -> list:
+    bad = []
+    for key in ("name", "t_start", "t_end", "attrs", "children"):
+        if key not in span:
+            return [f"{where}: span missing {key!r}: "
+                    f"{sorted(span)}"]
+    t0, t1 = span["t_start"], span["t_end"]
+    if not _is_num(t0) or not _is_num(t1) or t1 < t0:
+        bad.append(f"{where}: span {span['name']!r} window "
+                   f"[{t0!r}, {t1!r}] is not a valid interval")
+    elif parent_window is not None:
+        p0, p1 = parent_window
+        if t0 < p0 - 1e-9 or t1 > p1 + 1e-9:
+            bad.append(f"{where}: span {span['name']!r} "
+                       f"[{t0:.6f}, {t1:.6f}] escapes its parent "
+                       f"[{p0:.6f}, {p1:.6f}]")
+    if not isinstance(span["attrs"], dict):
+        bad.append(f"{where}: span {span['name']!r} attrs is not a dict")
+    for i, c in enumerate(span["children"]):
+        bad.extend(check_span(c, f"{where}.{span['name']}[{i}]",
+                              (t0, t1)))
+    return bad
+
+
+def check_traces(path: str) -> list:
+    bad = []
+    seen_ids = set()
+    covered = False
+    n = 0
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            line = line.strip()
+            if not line:
+                continue
+            n += 1
+            where = f"{os.path.basename(path)}:{lineno}"
+            try:
+                tr = json.loads(line)
+            except json.JSONDecodeError as e:
+                bad.append(f"{where}: not JSON ({e})")
+                continue
+            if "trace_id" not in tr or "root" not in tr:
+                bad.append(f"{where}: trace lacks trace_id/root")
+                continue
+            if tr["trace_id"] in seen_ids:
+                bad.append(f"{where}: duplicate trace_id "
+                           f"{tr['trace_id']!r}")
+            seen_ids.add(tr["trace_id"])
+            bad.extend(check_span(tr["root"], where))
+            names = span_names(tr)
+            it = iter(names)
+            if all(want in it for want in REQUEST_PATH):
+                covered = True
+    if n == 0:
+        bad.append(f"{path}: no traces (empty file)")
+    elif not covered:
+        bad.append(f"{path}: no trace covers the request path "
+                   f"{' -> '.join(REQUEST_PATH)} "
+                   f"(in depth-first order)")
+    return bad
+
+
+def check_embedded() -> list:
+    """Validate the obs.registry blocks inside committed BENCH_*.json."""
+    bad = []
+    found = 0
+    for path in sorted(glob.glob(os.path.join(REPO, "BENCH_*.json"))):
+        rel = os.path.relpath(path, REPO)
+        with open(path) as f:
+            payload = json.load(f)
+        snap = payload.get("obs", {}).get("registry")
+        if snap is None:
+            continue
+        found += 1
+        bad.extend(check_snapshot(snap, f"{rel}[obs.registry]"))
+    if found == 0:
+        bad.append("no BENCH_*.json carries an obs.registry block — "
+                   "rerun the benchmarks")
+    return bad
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics", default=None,
+                    help="MetricsRegistry snapshot JSON to validate")
+    ap.add_argument("--traces", default=None,
+                    help="trace JSONL (--trace-out) to validate")
+    ap.add_argument("--skip-embedded", action="store_true",
+                    help="do not validate BENCH_*.json obs blocks")
+    args = ap.parse_args()
+
+    bad = []
+    checked = []
+    if args.metrics:
+        with open(args.metrics) as f:
+            bad.extend(check_snapshot(json.load(f), args.metrics))
+        checked.append(args.metrics)
+    if args.traces:
+        bad.extend(check_traces(args.traces))
+        checked.append(args.traces)
+    if not args.skip_embedded:
+        bad.extend(check_embedded())
+        checked.append("BENCH_*.json[obs.registry]")
+
+    for msg in bad:
+        print(f"FAIL {msg}")
+    print(f"checked: {', '.join(checked)} — "
+          f"{'OK' if not bad else f'{len(bad)} problem(s)'}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -248,6 +248,26 @@ def main(smoke: bool = False, out: str = None):
         f"IVF kernel path slower than XLA ({NQ / t_ivf_k:.0f} vs " \
         f"{NQ / t_ivf_x:.0f} qps)"
 
+    # --- engine cache + unified-registry snapshot ------------------------
+    # the sections above time index.topk directly; this one goes through
+    # the RetrievalEngine so the BENCH payload carries registry-backed
+    # cache and memory metrics (check_bench gates cache_hit_rate,
+    # check_obs validates the snapshot schema)
+    from repro.serve import RetrievalEngine
+    eng = RetrievalEngine(ivf, k_top=KTOP, buckets=(NQ,),
+                          cache_size=4 * NQ)
+    qnp = np.asarray(queries)
+    for _ in range(4):          # repeat traffic: rounds 2-4 hit the LRU
+        eng.search(qnp)
+    est = eng.stats()
+    looked = est["cache_hits"] + est["cache_misses"]
+    cache_hit_rate = est["cache_hits"] / looked
+    print(f"\nengine cache over 4x repeat traffic: {est['cache_hits']} "
+          f"hits / {est['cache_misses']} misses "
+          f"(hit rate {cache_hit_rate:.2f})")
+    assert cache_hit_rate >= 0.5, \
+        f"repeat traffic should hit the LRU (rate {cache_hit_rate:.2f})"
+
     # --- BENCH json ------------------------------------------------------
     out = out or os.path.join(REPO, "BENCH_retrieval.json")
     payload = {
@@ -272,6 +292,10 @@ def main(smoke: bool = False, out: str = None):
             "ivf": {"nprobe": np_ivf, "qps_xla": NQ / t_ivf_x,
                     "qps_kernel": NQ / t_ivf_k},
         },
+        # unified-obs block: gated cache key + the engine's registry
+        # snapshot (includes the per-component index memory gauges)
+        "obs": {"cache_hit_rate": cache_hit_rate,
+                "registry": eng.registry.snapshot()},
     }
     with open(out, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -122,6 +122,7 @@ def _score(records, deadlines):
     """Per-class outcome counts + latency stats; effective p99 counts
     expired/rejected/failed as a 60s miss sentinel (an SLO miss is a
     miss, and a finite one keeps percentiles well-defined)."""
+    from repro.obs import percentile
     from repro.serve import DeadlineExceededError
 
     out = {}
@@ -149,12 +150,10 @@ def _score(records, deadlines):
         dl = deadlines[cls_name]
         ok = sum(1 for v in eff if v <= dl)
         counts["attainment"] = ok / max(1, len(recs))
-        counts["p50_ms"] = (float(np.percentile(lat, 50)) * 1e3
-                            if lat else float("nan"))
-        counts["p99_ms"] = (float(np.percentile(lat, 99)) * 1e3
-                            if lat else float("nan"))
-        counts["p99_eff_ms"] = (float(np.percentile(eff, 99)) * 1e3
-                                if eff else float("nan"))
+        # percentiles via the one obs implementation (NaN when empty)
+        counts["p50_ms"] = percentile(lat, 50) * 1e3
+        counts["p99_ms"] = percentile(lat, 99) * 1e3
+        counts["p99_eff_ms"] = percentile(eff, 99) * 1e3
         out[cls_name] = counts
     return out
 
@@ -259,6 +258,12 @@ def main(smoke: bool = False, out: str | None = None):
                   f"{s['p99_ms']:.1f}")
         done = sum(s["completed"] for s in score.values())
         ctrl = sched.controller
+        # the unified-registry view of the same run: cache behavior and
+        # the end-of-run queue depth become gated BENCH keys (check_bench
+        # regresses cache_hit_rate down / queue_depth up), and the full
+        # snapshot block is schema-validated by check_obs
+        est = eng.stats()
+        looked = est["cache_hits"] + est["cache_misses"]
         return {
             "classes": score,
             "qps_completed": done / elapsed,
@@ -266,6 +271,10 @@ def main(smoke: bool = False, out: str | None = None):
                             [(tr.level_from, tr.level_to)
                              for tr in ctrl.transitions]),
             "records": records,
+            "cache_hit_rate": (est["cache_hits"] / looked if looked
+                               else 0.0),
+            "queue_depth_end": obs["queue_depth"],
+            "registry": eng.registry.snapshot(),
         }
 
     def gate():
@@ -341,6 +350,11 @@ def main(smoke: bool = False, out: str | None = None):
                          "classes": r["classes"]}
                  for label, r in (("baseline", base), ("adaptive", adap))},
         "recall_at_10_served": rec10,
+        # unified-obs block: gated keys + the adaptive run's registry
+        # snapshot (schema-validated in CI by benchmarks/check_obs.py)
+        "obs": {"cache_hit_rate": adap["cache_hit_rate"],
+                "queue_depth_end": adap["queue_depth_end"],
+                "registry": adap["registry"]},
     }
     with open(out, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

@@ -49,6 +49,12 @@ the usual engine stats.
 With --data > 1 the gallery shards over a forced-host-device mesh
 (dry-run style) to exercise the sharded query path (both index kinds;
 incompatible with --mutable / --snapshot-dir, which are single-shard).
+
+Observability: ``--metrics-out FILE`` writes the run's final
+MetricsRegistry snapshot (render it with ``launch/metrics_report.py``),
+``--trace-sample R`` samples request traces at rate R (deterministic),
+and ``--trace-out FILE`` exports the sampled span trees as JSONL —
+``benchmarks/check_obs.py`` schema-validates both files.
 """
 
 from __future__ import annotations
@@ -140,7 +146,19 @@ def main():
     ap.add_argument("--restore-window-ms", type=float, default=500.0,
                     help="scheduler: sustained drain before stepping "
                          "back up")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final MetricsRegistry snapshot (JSON) "
+                         "here — launch/metrics_report.py renders it")
+    ap.add_argument("--trace-out", default=None,
+                    help="write sampled request traces here as JSONL "
+                         "(one span tree per line)")
+    ap.add_argument("--trace-sample", type=float, default=0.0,
+                    help="trace sampling rate in [0, 1] (deterministic: "
+                         "rate 0.25 samples every 4th request)")
     args = ap.parse_args()
+    if not 0.0 <= args.trace_sample <= 1.0:
+        ap.error(f"--trace-sample must be in [0, 1], got "
+                 f"{args.trace_sample}")
     if args.index in ("ivf", "ivfpq") and args.backend == "pallas":
         ap.error(f"--index {args.index} only supports --backend xla (the "
                  "fused pallas kernel serves the exact full-scan path)")
@@ -222,6 +240,7 @@ def main():
         print(f"snapshot saved to {args.snapshot_dir}")
     engine = RetrievalEngine(index, k_top=args.k, backend=args.backend,
                              cache_size=args.cache_size)
+    engine.tracer.sample_rate = args.trace_sample
     warm_ks = [args.k]
     if args.warmup_ks:
         warm_ks += [int(x) for x in args.warmup_ks.split(",")]
@@ -301,14 +320,18 @@ def main():
     wall = time.perf_counter() - t0
     front.close()
 
+    from repro.obs import percentile
+
     lat_ms = np.sort(np.asarray(lat)) * 1e3
     st = engine.stats()
     print(f"requests={args.requests} wall={wall:.2f}s "
           f"qps={args.requests / wall:.0f} "
           f"(device-side qps={st['qps']:.0f})")
     if lat_ms.size:
-        print(f"latency ms: p50={lat_ms[len(lat_ms) // 2]:.2f} "
-              f"p99={lat_ms[int(len(lat_ms) * 0.99) - 1]:.2f} "
+        # obs.percentile interpolates — the old index math
+        # (lat[int(n * 0.99) - 1]) underflowed to the *minimum* at small n
+        p50, p99 = percentile(lat_ms, (50.0, 99.0))
+        print(f"latency ms: p50={p50:.2f} p99={p99:.2f} "
               f"max={lat_ms[-1]:.2f}")
     print(f"batches={front.n_batches} "
           f"mean batch={np.mean(front.batch_sizes):.1f}")
@@ -372,6 +395,15 @@ def main():
         if args.snapshot_dir:
             save_index(index, args.snapshot_dir)
             print(f"post-churn snapshot saved to {args.snapshot_dir}")
+
+    # --- obs export ------------------------------------------------------
+    if args.metrics_out:
+        engine.registry.write_snapshot(args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        n_tr = engine.tracer.write_jsonl(args.trace_out, append=False)
+        print(f"traces -> {args.trace_out} ({n_tr} sampled of "
+              f"{engine.tracer.n_minted} minted)")
 
 
 if __name__ == "__main__":

@@ -115,6 +115,27 @@ class ClosedLoopTrainer:
                                       cfg.schedule)
         self.n_refreshes = 0
         self.refreshes = []          # per-refresh mining stats records
+        # obs: the loop records into the engine's registry/tracer so the
+        # closed loop and the serving path share one snapshot; refreshes
+        # are rare control-plane transitions, so their traces bypass
+        # sampling (force=True)
+        self.registry = getattr(engine, "registry", None)
+        self.tracer = getattr(engine, "tracer", None)
+        if self.registry is not None:
+            self._c_refresh = self.registry.counter(
+                "loop_refreshes_total", "index refresh + re-mine cycles")
+            self._g_staleness = self.registry.gauge(
+                "loop_staleness_steps",
+                "training steps since the pair pool's metric was current")
+            self._g_mined_frac = self.registry.gauge(
+                "loop_mined_frac",
+                "curriculum fraction of mined pairs in the current batch")
+            self._g_pool = self.registry.gauge(
+                "loop_pool_size", "pairs in the live mined pool")
+            self._g_neg_yield = self.registry.gauge(
+                "loop_neg_yield", "hard-negative yield of the last mine")
+            self._g_pos_yield = self.registry.gauge(
+                "loop_pos_yield", "hard-positive yield of the last mine")
 
     def _build_index(self, L):
         kw = dict(self.cfg.index_kwargs or {})
@@ -132,20 +153,48 @@ class ClosedLoopTrainer:
         """Push L into the index, re-mine, swap the pool. Returns stats.
         ``swap=False`` only re-mines (used for the initial pool, whose
         metric the index was just built with)."""
+        trace = (self.tracer.start_trace("refresh", force=True)
+                 if self.tracer is not None else None)
+        if trace is not None:
+            trace.root.set_attrs(step=step, swap=swap)
         if swap:
             L = np.asarray(L, np.float32)
             index = self.engine.index
             if isinstance(index, MutableIndex):
+                sp = (trace.span("swap_metric") if trace is not None
+                      else None)
                 index.swap_metric(L)  # version bump -> engine cache flush
+                if sp is not None:
+                    sp.set_attrs(rows=index.size).end()
             else:
                 # frozen base: rebuild off to the side and repoint the
                 # engine (the engine's LRU flushes on the identity change)
+                sp = trace.span("rebuild") if trace is not None else None
                 self.engine.index = self._build_index(L)
+                if sp is not None:
+                    sp.set_attrs(kind=self.cfg.index,
+                                 rows=self.engine.index.size).end()
+        m_sp = trace.span("mine") if trace is not None else None
         result = self.miner.mine(n_queries=self.cfg.mine_queries,
                                  seed=self.cfg.train.ps.seed
                                  + self.n_refreshes)
+        if m_sp is not None:
+            m_sp.set_attrs(n_queries=self.cfg.mine_queries,
+                           n_pairs=result.stats["n_pairs"],
+                           neg_yield=result.stats["neg_yield"]).end()
         self.source.set_pool(result)
         self.n_refreshes += 1
+        if self.registry is not None:
+            self._c_refresh.inc()
+            self._g_pool.set(self.source.pool_size)
+            self._g_neg_yield.set(result.stats["neg_yield"])
+            self._g_pos_yield.set(result.stats["pos_yield"])
+            self.registry.event("loop_refresh", step=step,
+                                refresh=self.n_refreshes,
+                                n_pairs=result.stats["n_pairs"],
+                                index_version=result.stats["index_version"])
+        if trace is not None:
+            self.tracer.finish(trace)
         rec = {"step": step, "refresh": self.n_refreshes, **result.stats}
         self.refreshes.append(rec)
         return rec
@@ -203,6 +252,10 @@ class ClosedLoopTrainer:
             loss = float(metrics["loss"])
             trace.append(loss)
             staleness_sum += t - last_refresh
+            if self.registry is not None:   # per-step staleness gauges
+                self._g_staleness.set(t - last_refresh)
+                self._g_mined_frac.set(self.cfg.schedule.mined_frac(t))
+                self._g_pool.set(self.source.pool_size)
             if t % tcfg.log_every == 0 or t == tcfg.steps - 1:
                 rec = {"step": t,
                        **{k: float(v) for k, v in metrics.items()},

@@ -146,6 +146,20 @@ class HardPairMiner:
                 f"({self.features.shape[0]}) rows")
         self.query_batch = int(query_batch)
         self.n_mines = 0
+        # obs: mining volume lands on the shared engine registry, labeled
+        # by pair kind, so one snapshot covers serving AND the closed loop
+        self.registry = getattr(self.engine, "registry", None)
+        if self.registry is not None:
+            self._c_mines = self.registry.counter(
+                "miner_mines_total", "mine() sweeps")
+            self._c_queries = self.registry.counter(
+                "miner_queries_total", "anchor queries mined")
+            self._c_pairs = self.registry.counter(
+                "miner_pairs_total", "mined training pairs by kind",
+                labelnames=("kind",))
+            self._c_starved = self.registry.counter(
+                "miner_starved_total",
+                "anchors that yielded no pair at all")
         # class -> row ids, for hard-positive candidate sampling
         order = np.argsort(self.labels, kind="stable")
         classes, starts = np.unique(self.labels[order], return_index=True)
@@ -228,6 +242,15 @@ class HardPairMiner:
             "engine_qps": dev / busy if busy > 0 else 0.0,
             "index_version": self.engine.index.version,
         }
+        if self.registry is not None:
+            self._c_mines.inc()
+            self._c_queries.inc(stats["n_queries"])
+            self._c_starved.inc(stats["n_starved"])
+            for kind, key in (("hard_neg", "n_hard_neg"),
+                              ("semi_hard", "n_semi_hard"),
+                              ("fallback_neg", "n_fallback_neg"),
+                              ("hard_pos", "n_hard_pos")):
+                self._c_pairs.inc(stats[key], kind=kind)
         return MiningResult(pairs=pairs, stats=stats)
 
     # -- label filter --------------------------------------------------------

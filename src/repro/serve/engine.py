@@ -12,8 +12,16 @@ The engine owns the serving concerns the index should not know about:
     entirely when every row of a batch hits. ``index.version`` is the
     invalidation hook: any bump (gallery mutation, index swap-in) flushes
     the cache before the next lookup;
-  * **counters** — requests / queries / wall-clock / cache hit-miss for
-    QPS reporting via ``stats()``.
+  * **observability** — the engine owns the stack-wide
+    ``obs.MetricsRegistry`` and ``obs.Tracer``: request/query/cache
+    counters, the device-path latency histogram, and per-index memory
+    gauges all live on the registry, and every layer that attaches to
+    the engine (scheduler, batcher, mutable index, miner, closed loop)
+    records into the same instance. ``stats()`` is a backward-compatible
+    *view* over the registry — same keys, same values as the old private
+    counters. Counter updates are atomic under the registry lock: the
+    old bare-attribute read-modify-writes lost increments when batcher
+    and scheduler threads raced.
 
 Works against any MetricIndex backend (serve/index.py exact scan,
 serve/ivf.py cluster-pruned, serve/pq.py product-quantized, and
@@ -23,17 +31,24 @@ serve/mutable.py wrapping any of them).
 from __future__ import annotations
 
 import collections
-import time
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import MetricsRegistry, Tracer, index_memory
+from repro.obs.trace import NULL_SPAN
+from repro.serve.clock import Clock, SystemClock
 from repro.serve.index import MetricIndex
 
 DEFAULT_BUCKETS = (8, 32, 128, 512)
 DEFAULT_CACHE = 1024
+
+# every component index_memory can report, so a collector can zero the
+# ones the current index lacks (an index swap must not leave stale bytes)
+_MEMORY_COMPONENTS = ("gallery", "codes", "centroids", "delta",
+                      "host_store")
 
 
 class RetrievalEngine:
@@ -42,13 +57,18 @@ class RetrievalEngine:
     One engine serves one index (swap ``engine.index`` to repoint it; the
     cache notices the identity change and flushes). Thread-safety: calls
     are expected from a single worker thread — the MicroBatcher front
-    door provides exactly that.
+    door provides exactly that — but the registry-backed counters are
+    additionally safe under concurrent callers (each increment is atomic
+    under the registry lock).
     """
 
     def __init__(self, index: MetricIndex, k_top: int = 10,
                  backend: str = "xla",
                  buckets: Sequence[int] = DEFAULT_BUCKETS,
-                 cache_size: int = DEFAULT_CACHE):
+                 cache_size: int = DEFAULT_CACHE,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None,
+                 clock: Optional[Clock] = None):
         """Args:
           index: any MetricIndex backend (Exact / IVF / IVFPQ / Mutable).
           k_top: default neighbors per query (>= 1; per-call override in
@@ -59,6 +79,12 @@ class RetrievalEngine:
             bucket (an oversized batch is served as-is, one extra
             compile).
           cache_size: hot-query LRU entries (0 disables caching).
+          registry: the stack's MetricsRegistry (default: a fresh one —
+            pass an existing registry to merge several engines' metrics).
+          tracer: the stack's Tracer (default: a fresh one with
+            sample_rate 0 — tracing off until a front end raises it).
+          clock: time source for busy-time/latency measurement (default
+            SystemClock; FakeClock makes histogram tests exact).
         """
         if backend not in ("xla", "pallas"):
             raise ValueError(f"unknown backend {backend!r}")
@@ -69,21 +95,97 @@ class RetrievalEngine:
         self.backend = backend
         self.buckets = tuple(sorted(buckets))
         self.cache_size = cache_size
+        self.clock = clock if clock is not None else SystemClock()
         # attached traffic front end (serve/scheduler.py RequestScheduler
         # sets this); stats() merges its observability block when present
         self.frontend = None
-        self.n_requests = 0
-        self.n_queries = 0
-        self.n_device_queries = 0
-        self.busy_s = 0.0
-        self.cache_hits = 0
-        self.cache_misses = 0
+        self.registry = (registry if registry is not None
+                         else MetricsRegistry(clock=self.clock))
+        self.tracer = (tracer if tracer is not None
+                       else Tracer(clock=self.clock, sample_rate=0.0))
+        r = self.registry
+        self._c_requests = r.counter(
+            "engine_requests_total", "search() calls")
+        self._c_queries = r.counter(
+            "engine_queries_total", "query rows received")
+        self._c_device_queries = r.counter(
+            "engine_device_queries_total",
+            "query rows that reached the device (cache misses, incl. "
+            "bucket pad overhead excluded)")
+        self._c_busy = r.counter(
+            "engine_busy_seconds_total", "device-path wall time")
+        self._c_cache_hits = r.counter(
+            "engine_cache_hits_total",
+            "query rows served from the hot-query LRU")
+        self._c_cache_misses = r.counter(
+            "engine_cache_misses_total",
+            "query rows that missed the LRU")
+        self._h_search = r.histogram(
+            "engine_search_seconds",
+            "device-path latency per searched batch")
+        self._g_cache_entries = r.gauge(
+            "engine_cache_entries", "hot-query LRU entries resident")
+        self._g_gallery_rows = r.gauge(
+            "index_gallery_rows", "rows the served index holds")
+        self._g_memory = r.gauge(
+            "index_memory_bytes",
+            "resident bytes of the served index, by component",
+            labelnames=("component",))
+        r.register_collector(self._collect_gauges)
         # (query f32 bytes, k) -> (dists (k,), idxs (k,)) numpy rows
         self._cache: "collections.OrderedDict" = collections.OrderedDict()
         # identity + version: a freshly built replacement index also has
         # version 0, so version alone cannot detect an index swap-in
         self._cache_index = index
         self._cache_version = index.version
+        self._adopt_index()
+
+    def _adopt_index(self):
+        """Point the index's lifecycle events (mutable compaction/swap,
+        snapshot save) at this engine's registry. Re-run by the gauge
+        collector so a swapped-in index is adopted too."""
+        if (hasattr(self.index, "registry")
+                and getattr(self.index, "registry", None) is None):
+            self.index.registry = self.registry
+
+    def _collect_gauges(self):
+        """Snapshot-time gauges: LRU residency, gallery rows, and the
+        per-component memory budget (ROADMAP's paper-scale accounting).
+        Components the current index lacks are zeroed — an index swap
+        must not leave another backend's bytes dangling."""
+        self._adopt_index()
+        self._g_cache_entries.set(len(self._cache))
+        self._g_gallery_rows.set(self.index.size)
+        mem = index_memory(self.index)
+        for comp in _MEMORY_COMPONENTS:
+            self._g_memory.set(mem.get(comp, 0), component=comp)
+
+    # -- backward-compatible counter attributes ------------------------------
+    # (tests and the miner read these; writes go through the registry)
+
+    @property
+    def n_requests(self) -> int:
+        return int(self._c_requests.value())
+
+    @property
+    def n_queries(self) -> int:
+        return int(self._c_queries.value())
+
+    @property
+    def n_device_queries(self) -> int:
+        return int(self._c_device_queries.value())
+
+    @property
+    def busy_s(self) -> float:
+        return self._c_busy.value()
+
+    @property
+    def cache_hits(self) -> int:
+        return int(self._c_cache_hits.value())
+
+    @property
+    def cache_misses(self) -> int:
+        return int(self._c_cache_misses.value())
 
     def _bucket(self, n: int) -> int:
         for b in self.buckets:
@@ -128,7 +230,8 @@ class RetrievalEngine:
 
     # -- search --------------------------------------------------------------
 
-    def search(self, queries, k_top: Optional[int] = None, **topk_kw):
+    def search(self, queries, k_top: Optional[int] = None, *,
+               span=None, **topk_kw):
         """queries (Nq, d) or a single (d,) vector. Returns
         (dists (Nq, k_top), indices (Nq, k_top)) as numpy arrays.
 
@@ -136,7 +239,14 @@ class RetrievalEngine:
         hook: the scheduler passes per-request quality knobs (``nprobe``,
         ``rerank``) here without the engine knowing their meaning. Knobs
         join the cache key, so answers computed at degraded quality are
-        never served to full-quality lookups (or vice versa)."""
+        never served to full-quality lookups (or vice versa).
+
+        ``span`` (keyword-only, never forwarded to the index) is an
+        obs.Span under which the engine records its internal stages —
+        cache_lookup / pad / device_topk — with scan_impl, nprobe,
+        rerank_depth, and batch size as attributes; front ends pass the
+        sampled request's span here."""
+        sp = span if span is not None else NULL_SPAN
         # `is None`, not truthiness: `k_top or default` silently mapped an
         # explicit k_top=0 to the default instead of rejecting it
         k = self.k_top if k_top is None else k_top
@@ -152,33 +262,49 @@ class RetrievalEngine:
         if single:
             q = q[None, :]
         n = q.shape[0]
-        self.n_requests += 1
-        self.n_queries += n
+        self._c_requests.inc()
+        self._c_queries.inc(n)
         if n == 0:
             return (np.zeros((0, k), np.float32),
                     np.zeros((0, k), np.int32))
 
         keys = None
         if caching:                 # disabled cache pays no hashing
+            c_sp = sp.child("cache_lookup")
             keys = [(row.tobytes(), k, knobs) for row in q]
             cached = self._cache_lookup(keys)
             if all(c is not None for c in cached):  # full hit: skip device
-                self.cache_hits += n
+                self._c_cache_hits.inc(n)
+                c_sp.set_attrs(hit=True, rows=n).end()
                 dists = np.stack([c[0] for c in cached])
                 idxs = np.stack([c[1] for c in cached])
                 return (dists[0], idxs[0]) if single else (dists, idxs)
-            self.cache_misses += n
+            self._c_cache_misses.inc(n)
+            c_sp.set_attrs(hit=False, rows=n).end()
             q = jnp.asarray(q)
 
-        self.n_device_queries += n
+        self._c_device_queries.inc(n)
         b = self._bucket(n)
         if b != n:      # pad rows are real compute but sliced from results
-            q = jnp.concatenate([q, jnp.zeros((b - n, q.shape[1]), q.dtype)])
+            with sp.child("pad").set_attrs(rows=n, bucket=b):
+                q = jnp.concatenate(
+                    [q, jnp.zeros((b - n, q.shape[1]), q.dtype)])
 
-        t0 = time.perf_counter()
+        d_sp = sp.child("device_topk").set_attrs(
+            batch=b, k=k,
+            scan_impl=getattr(self.index, "scan_impl", None),
+            nprobe=topk_kw.get("nprobe",
+                               getattr(self.index, "nprobe", None)),
+            rerank_depth=topk_kw.get("rerank",
+                                     getattr(self.index, "rerank_depth",
+                                             None)))
+        t0 = self.clock.now()
         dists, idxs = self.index.topk(q, k, backend=self.backend, **topk_kw)
         dists, idxs = jax.block_until_ready((dists, idxs))
-        self.busy_s += time.perf_counter() - t0
+        dt = self.clock.now() - t0
+        d_sp.end()
+        self._c_busy.inc(dt)
+        self._h_search.observe(dt)
 
         dists = np.asarray(dists[:n])
         idxs = np.asarray(idxs[:n])
@@ -204,7 +330,10 @@ class RetrievalEngine:
                                 backend=self.backend)
 
     def stats(self) -> dict:
-        """Serving counters as a plain dict (safe to log/serialize).
+        """Serving counters as a plain dict (safe to log/serialize) — a
+        backward-compatible view over the MetricsRegistry (the registry
+        snapshot is the superset; this keeps every pre-registry consumer
+        working unmodified).
 
         Always present: n_requests / n_queries / n_device_queries,
         busy_s, qps (device-side), gallery_size, n_shards, backend,
@@ -219,12 +348,13 @@ class RetrievalEngine:
         """
         # device qps over device-served queries only: cache hits add no
         # busy time and would inflate the ratio under repeat traffic
-        qps = self.n_device_queries / self.busy_s if self.busy_s > 0 else 0.0
+        busy = self.busy_s
+        qps = self.n_device_queries / busy if busy > 0 else 0.0
         out = {
             "n_requests": self.n_requests,
             "n_queries": self.n_queries,
             "n_device_queries": self.n_device_queries,
-            "busy_s": self.busy_s,
+            "busy_s": busy,
             "qps": qps,
             "gallery_size": self.index.size,
             "n_shards": self.index.n_shards,

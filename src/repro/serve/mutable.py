@@ -132,6 +132,10 @@ class MutableIndex:
         self.n_compactions = 0
         self.n_rebuilds = 0          # compactions that fell back to k-means
         self.n_swaps = 0
+        # obs hook: the engine points this at its MetricsRegistry on
+        # adoption; lifecycle transitions (compaction, spill rebuild,
+        # metric swap) then land as structured events + counters
+        self.registry = None
         self._delta_dev = None       # (version, cap, gp, gn, slot ids)
         self._delta_fns: dict = {}   # (cap, kk) -> jitted delta scan
 
@@ -466,6 +470,8 @@ class MutableIndex:
         """
         if self.delta_rows == 0 and self.tombstones == 0:
             return False
+        folded, dropped = self.delta_rows, self.tombstones
+        rebuilds_before = self.n_rebuilds
         if isinstance(self.base, IVFPQIndex):
             self._compact_ivfpq()
         elif isinstance(self.base, IVFIndex):
@@ -473,9 +479,23 @@ class MutableIndex:
         else:
             self._compact_exact()
         self.n_compactions += 1
+        self._event("compaction", base=type(self.base).__name__,
+                    delta_rows=folded, tombstones=dropped,
+                    spill_rebuild=self.n_rebuilds > rebuilds_before,
+                    size=self.base.size)
         self._reset_delta()
         self._bump()
         return True
+
+    def _event(self, name: str, **attrs) -> None:
+        """Structured lifecycle event onto the adopting engine's registry
+        (no-op while unadopted — a bare index carries no obs plumbing)."""
+        if self.registry is not None:
+            self.registry.event(f"index_{name}", **attrs)
+            self.registry.counter(
+                "index_lifecycle_total",
+                "mutable-index lifecycle transitions by kind",
+                labelnames=("event",)).inc(event=name)
 
     def _reset_delta(self):
         k = self.delta_gp.shape[1]
@@ -546,6 +566,8 @@ class MutableIndex:
             if raw is not None:
                 self.raw_base = raw
             self.n_rebuilds += 1
+            self._event("spill_rebuild", free_slots=int(n_free),
+                        live_delta=int(len(live_d)))
             return
 
         # in-place fold: each delta row takes a free slot in its nearest
@@ -722,5 +744,7 @@ class MutableIndex:
         self.raw_base = raw
         self.L = L_new
         self.n_swaps += 1
+        self._event("swap_metric", base=type(new_base).__name__,
+                    rows=int(raw.shape[0]), block_rows=block_rows)
         self._reset_delta()
         self._bump()

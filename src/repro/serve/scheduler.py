@@ -48,6 +48,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
 from repro.serve.clock import Clock, SystemClock
 from repro.serve.engine import RetrievalEngine
 
@@ -116,41 +117,58 @@ class LatencyWindow:
             return len(self._samples)
 
     def percentile(self, q) -> float:
-        """np.percentile (linear interpolation) over the current window;
-        NaN when empty. ``q`` may be a scalar or a sequence."""
+        """obs.percentile (linear interpolation, as np.percentile) over
+        the current window; NaN when empty. ``q`` may be a scalar or a
+        sequence. This used to be one of three ad-hoc percentile
+        implementations; all of them now route through obs."""
         with self._lock:
-            if not self._samples:
-                return (float("nan") if np.isscalar(q)
-                        else [float("nan")] * len(q))
-            arr = np.fromiter(self._samples, np.float64)
-        out = np.percentile(arr, q)
-        return float(out) if np.isscalar(q) else [float(v) for v in out]
+            samples = list(self._samples)
+        return obs_metrics.percentile(samples, q)
+
+
+_OUTCOMES = ("admitted", "rejected", "expired", "completed", "failed",
+             "cancelled")
 
 
 class _ClassStats:
-    """Monotone counters + latency window for one priority class. Counter
-    bumps hold the lock so concurrent submit/worker updates never lose an
-    increment; ``snapshot`` reads them atomically."""
+    """Per-priority-class counters + latency, re-homed onto the stack's
+    MetricsRegistry: ``frontend_requests_total{class,outcome}`` and the
+    ``frontend_latency_seconds{class}`` histogram. Increments are atomic
+    under the registry lock; the windowed percentile readout stays local
+    (recent tail, not lifetime) via LatencyWindow."""
 
-    def __init__(self):
-        self.lock = threading.Lock()
-        self.admitted = 0
-        self.rejected = 0
-        self.expired = 0
-        self.completed = 0
-        self.failed = 0          # engine exceptions surfaced to futures
-        self.cancelled = 0
+    def __init__(self, name: str, registry: obs_metrics.MetricsRegistry):
+        self.name = name
+        self._c = registry.counter(
+            "frontend_requests_total",
+            "front-end requests by priority class and outcome "
+            "(admitted counts entry; the others are terminal)",
+            labelnames=("cls", "outcome"))
+        self._h = registry.histogram(
+            "frontend_latency_seconds",
+            "submit-to-resolve latency of completed requests",
+            labelnames=("cls",))
         self.latency = LatencyWindow()
 
     def bump(self, field: str, by: int = 1) -> None:
-        with self.lock:
-            setattr(self, field, getattr(self, field) + by)
+        if field not in _OUTCOMES:
+            raise ValueError(f"unknown outcome {field!r}")
+        self._c.inc(by, cls=self.name, outcome=field)
+
+    def record_latency(self, seconds: float) -> None:
+        self.latency.record(seconds)
+        self._h.observe(seconds, cls=self.name)
+
+    def __getattr__(self, field):
+        # back-compat reads (st.admitted, st.completed, ...) resolve to
+        # the registry counter; only reached when not a real attribute
+        if field in _OUTCOMES:
+            return int(self._c.value(cls=self.name, outcome=field))
+        raise AttributeError(field)
 
     def snapshot(self) -> dict:
-        with self.lock:
-            out = {f: getattr(self, f) for f in
-                   ("admitted", "rejected", "expired", "completed",
-                    "failed", "cancelled")}
+        out = {f: int(self._c.value(cls=self.name, outcome=f))
+               for f in _OUTCOMES}
         p50, p99 = self.latency.percentile((50.0, 99.0))
         out["p50_ms"] = p50 * 1e3
         out["p99_ms"] = p99 * 1e3
@@ -275,6 +293,8 @@ class _Request:
     cls: PriorityClass
     t_submit: float
     t_deadline: float
+    trace: object = None        # obs.Trace minted at submit (or None)
+    q_span: object = None       # open "queue" span, ended at dequeue
 
 
 class RequestScheduler:
@@ -302,16 +322,35 @@ class RequestScheduler:
         self.max_batch = max_batch
         self.max_wait_s = max_wait_ms / 1e3
         self.clock = clock if clock is not None else SystemClock()
+        # share the engine's registry/tracer when it has them (the real
+        # RetrievalEngine always does), so the whole stack records into
+        # one instance; a bare test double gets a private registry
+        reg = getattr(engine, "registry", None)
+        self.registry = (reg if reg is not None
+                         else obs_metrics.MetricsRegistry(clock=self.clock))
+        self.tracer = getattr(engine, "tracer", None)
         # strict priority: queues iterated in ascending priority order
         self._classes: Dict[str, PriorityClass] = {
             c.name: c for c in sorted(classes, key=lambda c: c.priority)}
         self._queues: Dict[str, collections.deque] = {
             name: collections.deque() for name in self._classes}
         self._stats: Dict[str, _ClassStats] = {
-            name: _ClassStats() for name in self._classes}
+            name: _ClassStats(name, self.registry)
+            for name in self._classes}
         self._cond = threading.Condition()
         self._closed = False
-        self.n_batches = 0
+        self._c_batches = self.registry.counter(
+            "frontend_batches_total", "batches dispatched to the engine")
+        self._h_batch = self.registry.histogram(
+            "frontend_batch_size", "live requests per dispatched batch",
+            buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256))
+        self._g_depth = self.registry.gauge(
+            "frontend_queue_depth", "requests waiting, by priority class",
+            labelnames=("cls",))
+        self._g_level = self.registry.gauge(
+            "frontend_degradation_level",
+            "current quality-ladder level (0 = full quality)")
+        self.registry.register_collector(self._collect_gauges)
         self.batch_sizes: collections.deque = collections.deque(maxlen=4096)
         if degrade:
             lad = (tuple(ladder) if ladder is not None
@@ -334,6 +373,34 @@ class RequestScheduler:
             for i in range(n_workers)]
         for t in self._threads:
             t.start()
+
+    def _collect_gauges(self):
+        """Snapshot-time gauges: per-class queue depth + ladder level
+        (the ROADMAP's dashboard gauges). No-ops once another scheduler
+        has attached to the same engine — collectors registered on a
+        shared registry outlive this front end."""
+        if self.engine.frontend is not self:
+            return
+        with self._cond:
+            depths = {name: len(q) for name, q in self._queues.items()}
+        for name, depth in depths.items():
+            self._g_depth.set(depth, cls=name)
+        ctrl = self.controller
+        self._g_level.set(0 if ctrl is None else ctrl.level)
+
+    @property
+    def n_batches(self) -> int:
+        return int(self._c_batches.value())
+
+    def _finish_trace(self, r: _Request, outcome: str) -> None:
+        """Close a request's trace (no-op for untraced requests): end the
+        queue span if still open, stamp the outcome, hand the tree to the
+        tracer."""
+        if r.trace is None:
+            return
+        r.q_span.end()
+        r.trace.root.set_attrs(outcome=outcome)
+        self.tracer.finish(r.trace)
 
     # -- client side --------------------------------------------------------
 
@@ -379,7 +446,14 @@ class RequestScheduler:
                     f"with backoff or shed load upstream")
             now = self.clock.now()
             fut: Future = Future()
-            queue.append(_Request(q, k, fut, cls, now, now + dl))
+            r = _Request(q, k, fut, cls, now, now + dl)
+            if self.tracer is not None and self.tracer.sample_rate > 0:
+                # the trace id is minted here, at admission; the "queue"
+                # span stays open until a worker dequeues the request
+                r.trace = self.tracer.start_trace("request")
+                r.trace.root.set_attrs(cls=cls.name, k=k)
+                r.q_span = r.trace.span("queue")
+            queue.append(r)
             st.bump("admitted")
             self._cond.notify_all()
         return fut
@@ -401,8 +475,10 @@ class RequestScheduler:
                                 RejectedError("scheduler closed before "
                                               "the request was served"))
                             self._stats[name].bump("rejected")
+                            self._finish_trace(r, "rejected")
                         else:
                             self._stats[name].bump("cancelled")
+                            self._finish_trace(r, "cancelled")
             self._cond.notify_all()
         for t in self._threads:
             t.join(timeout=timeout)
@@ -422,6 +498,7 @@ class RequestScheduler:
                 r = queue.popleft()
                 if r.fut.cancelled():   # client walked away while queued
                     self._stats[name].bump("cancelled")
+                    self._finish_trace(r, "cancelled")
                     continue
                 if r.t_deadline <= now:
                     if r.fut.set_running_or_notify_cancel():
@@ -430,8 +507,10 @@ class RequestScheduler:
                             f"{r.t_deadline - r.t_submit:.3f}s expired "
                             f"in queue"))
                         self._stats[name].bump("expired")
+                        self._finish_trace(r, "expired")
                     else:
                         self._stats[name].bump("cancelled")
+                        self._finish_trace(r, "cancelled")
                     continue
                 return r
         return None
@@ -486,12 +565,16 @@ class RequestScheduler:
         for r in batch:
             if not r.fut.set_running_or_notify_cancel():
                 self._stats[r.cls.name].bump("cancelled")
+                self._finish_trace(r, "cancelled")
             elif r.t_deadline <= now:   # expired during batch formation
                 r.fut.set_exception(DeadlineExceededError(
                     f"{r.cls.name} deadline expired during batch "
                     f"formation"))
                 self._stats[r.cls.name].bump("expired")
+                self._finish_trace(r, "expired")
             else:
+                if r.q_span is not None:
+                    r.q_span.end()      # dequeued: queue wait is over
                 live.append(r)
         if not live:
             return
@@ -501,23 +584,49 @@ class RequestScheduler:
             knobs = self.controller.observe(depth)
         else:
             knobs = {}
+        # one batch serves many requests but the engine takes one span:
+        # the first *sampled* rider carries the batch + engine detail
+        # (other sampled riders in the same batch keep their queue span
+        # and outcome, without the shared-stage duplication)
+        carrier = next((r for r in live
+                        if r.trace is not None and r.trace.sampled), None)
+        b_span = e_span = None
+        if carrier is not None:
+            b_span = carrier.trace.span("batch").set_attrs(
+                size=len(live), level=(0 if self.controller is None
+                                       else self.controller.level),
+                **{f"knob_{k}": v for k, v in knobs.items()})
+            e_span = carrier.trace.span("engine", parent=b_span)
         try:
             qs = np.stack([r.q for r in live])
             with self._engine_lock:
-                dists, idxs = self.engine.search(qs, **knobs)
+                if e_span is not None:
+                    dists, idxs = self.engine.search(qs, span=e_span,
+                                                     **knobs)
+                else:
+                    dists, idxs = self.engine.search(qs, **knobs)
         except Exception as e:          # fail every rider, keep serving
+            if b_span is not None:
+                e_span.set_attrs(error=repr(e)).end()
+                b_span.end()
             for r in live:              # already RUNNING: resolve directly
                 r.fut.set_exception(e)
                 self._stats[r.cls.name].bump("failed")
+                self._finish_trace(r, "failed")
             return
-        self.n_batches += 1
+        if b_span is not None:
+            e_span.end()
+            b_span.end()
+        self._c_batches.inc()
+        self._h_batch.observe(len(live))
         self.batch_sizes.append(len(live))
         done = self.clock.now()
         for row, r in enumerate(live):
             st = self._stats[r.cls.name]
             r.fut.set_result((dists[row, :r.k], idxs[row, :r.k]))
             st.bump("completed")
-            st.latency.record(done - r.t_submit)
+            st.record_latency(done - r.t_submit)
+            self._finish_trace(r, "completed")
 
     # -- warmup / observability ---------------------------------------------
 

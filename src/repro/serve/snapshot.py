@@ -134,13 +134,15 @@ def _load_base(path: str, meta: dict):
         scan_impl=str(meta.get("scan_impl", "auto")))
 
 
-def save_index(index, snapshot_dir: str) -> dict:
+def save_index(index, snapshot_dir: str, *, registry=None) -> dict:
     """Persist an ExactIndex / IVFIndex / IVFPQIndex / MutableIndex
     (over any of those bases) to ``snapshot_dir``.
 
     Writes the npz segments first and the manifest last (its presence
     marks the snapshot complete; re-saving retracts the old manifest
-    before touching segments). Returns the manifest dict.
+    before touching segments). Returns the manifest dict. ``registry``
+    (or the index's own adopting registry) gets an ``index_snapshot_save``
+    event.
     """
     _require_unsharded(index)
     os.makedirs(snapshot_dir, exist_ok=True)
@@ -191,10 +193,26 @@ def save_index(index, snapshot_dir: str) -> dict:
     with open(path + ".tmp", "w") as f:
         json.dump(manifest, f, indent=2, sort_keys=True)
     os.replace(path + ".tmp", path)
+    _emit(index, registry, "snapshot_save", type=manifest["type"],
+          size=manifest["size"], version=manifest["version"],
+          dir=snapshot_dir)
     return manifest
 
 
-def load_index(snapshot_dir: str, *, expect_L=None):
+def _emit(index, registry, name: str, **attrs) -> None:
+    """Structured obs event: the explicit registry wins, else the index's
+    adopting registry (the engine attaches one to MutableIndex; frozen
+    bases have none — no-op)."""
+    registry = (registry if registry is not None
+                else getattr(index, "registry", None))
+    if registry is not None:
+        registry.event(f"index_{name}", **attrs)
+        registry.counter(
+            "index_lifecycle_total", "index lifecycle transitions",
+            labelnames=("event",)).inc(event=name)
+
+
+def load_index(snapshot_dir: str, *, expect_L=None, registry=None):
     """Reconstruct a saved index; no gallery projection, no k-means.
 
     Args:
@@ -202,6 +220,9 @@ def load_index(snapshot_dir: str, *, expect_L=None):
       expect_L: optional metric factor to assert the snapshot was built
         under — a fingerprint mismatch raises ValueError before any
         array loads (callers can then load plain and ``swap_metric``).
+      registry: optional obs MetricsRegistry to receive the
+        ``index_snapshot_load`` event (a freshly loaded index has no
+        adopting engine yet).
 
     Returns the restored index (same concrete type that was saved, same
     ``version``); its top-k answers are bit-for-bit identical to the
@@ -230,6 +251,9 @@ def load_index(snapshot_dir: str, *, expect_L=None):
                       manifest["base"])
     if manifest["type"] != "MutableIndex":
         base.version = manifest["version"]
+        _emit(base, registry, "snapshot_load", type=manifest["type"],
+              size=manifest["size"], version=manifest["version"],
+              dir=snapshot_dir)
         return base
 
     with np.load(os.path.join(snapshot_dir, "mutable.npz")) as z:
@@ -264,4 +288,7 @@ def load_index(snapshot_dir: str, *, expect_L=None):
     mut.n_rebuilds = int(meta["n_rebuilds"])
     mut.n_swaps = int(meta["n_swaps"])
     mut.version = manifest["version"]
+    _emit(mut, registry, "snapshot_load", type=manifest["type"],
+          size=manifest["size"], version=manifest["version"],
+          dir=snapshot_dir)
     return mut
