@@ -6,7 +6,10 @@ The end product of DML training is only realized at query time: nearest
 neighbors under M = L^T L. This example learns L on pair constraints
 (paper Eq. 4), pre-projects a gallery once (ExactIndex), and shows that
 top-k neighbors under the learned metric are far more class-pure than
-Euclidean neighbors on the same data. It then swaps the same engine onto
+Euclidean neighbors on the same data. A low-rank detour trains a
+rectangular (8, 64) factor (`l_rank`) on the same pairs and serves the
+same gallery from ~7x less projected memory at near-square class
+purity. It then swaps the same engine onto
 the cluster-pruned IVFIndex and shows near-identical neighbors while
 scanning a fraction of the gallery per query, and onto the
 product-quantized IVFPQIndex — the same probes over uint8 residual codes
@@ -73,6 +76,35 @@ def main():
           f"vs euclidean {p_euclid:.3f} (chance {1 / 8:.3f})")
     print(f"engine: {engine.stats()}")
     assert p_learned > p_euclid
+
+    # --- low-rank L: same contract, a fraction of the memory -------------
+    # l_rank trains a genuinely rectangular (d', D) factor directly on
+    # the pair objective (M = L^T L is PSD at any rank — no projection
+    # step), and every projected artifact downstream is sized d', so the
+    # serving gallery shrinks by ~D/d'
+    from repro.obs import index_memory
+
+    L_sq, _ = train_dml_single(dml.DMLConfig(feat_dim=64, l_rank=64),
+                               train_pairs, steps=300, batch_size=512,
+                               lr=2e-2, seed=0)
+    L_lr, _ = train_dml_single(dml.DMLConfig(feat_dim=64, l_rank=8),
+                               train_pairs, steps=300, batch_size=512,
+                               lr=2e-2, seed=0)
+    idx_sq = ExactIndex.build(L_sq, jnp.asarray(gallery))
+    idx_lr = ExactIndex.build(L_lr, jnp.asarray(gallery))
+    mem_sq = index_memory(idx_sq)["gallery"]
+    mem_lr = index_memory(idx_lr)["gallery"]
+    _, nbrs_sq = RetrievalEngine(idx_sq, k_top=10).search(queries)
+    _, nbrs_lr = RetrievalEngine(idx_lr, k_top=10).search(queries)
+    r_lr = recall_at_k(nbrs_lr, nbrs_sq)
+    p_lr = purity(g_labels, q_labels, nbrs_lr)
+    print(f"low-rank L {tuple(np.shape(L_lr))} vs square "
+          f"{tuple(np.shape(L_sq))}: projected gallery "
+          f"{mem_lr / 1e3:.0f} kB vs {mem_sq / 1e3:.0f} kB "
+          f"({mem_sq / mem_lr:.1f}x smaller), recall@10 vs square-L "
+          f"neighbors {r_lr:.3f}, purity {p_lr:.3f}")
+    assert mem_sq / mem_lr >= 4.0       # d' = D/8 -> ~7x measured
+    assert p_lr > p_euclid              # rank 8 still beats Euclidean
 
     # same engine API, cluster-pruned backend: scan nprobe of n_clusters
     # gallery segments per query instead of all 3500 rows

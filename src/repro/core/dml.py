@@ -6,8 +6,19 @@ Implements both the original constrained SDP form (Eq. 1, used by the
     min_L  sum_{(x,y) in S} ||L(x-y)||^2
          + lambda * sum_{(x,y) in D} max(0, 1 - ||L(x-y)||^2)
 
-where ``M = L^T L`` is the implied Mahalanobis matrix, ``L`` is ``(k, d)``
-with ``k <= d``. Everything is pure JAX and jit/pjit friendly.
+where ``M = L^T L`` is the implied Mahalanobis matrix, ``L`` is
+``(d_out, d_in)`` with ``d_out <= d_in``. Everything is pure JAX and
+jit/pjit friendly.
+
+Low-rank training (Qian et al. 2015, "Towards Making High Dimensional
+Distance Metric Learning Practical") falls out of the same objective:
+optimizing a *rectangular* L with ``d_out = l_rank << d_in`` directly on
+the pairwise hinge loss keeps ``M = L^T L`` PSD by construction (rank at
+most ``l_rank``) — no PSD projection, no square factor, and every
+downstream consumer (projected galleries, PQ codes, kernel tiles,
+snapshots) shrinks by ``d_in / l_rank``. Set ``DMLConfig(l_rank=...)``
+to pick the rank; the trainer and PS update path are shape-agnostic in
+``d_out``.
 """
 
 from __future__ import annotations
@@ -23,25 +34,46 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class DMLConfig:
-    """Hyper-parameters of the reformulated DML objective (paper §3/§5.2)."""
+    """Hyper-parameters of the reformulated DML objective (paper §3/§5.2).
 
-    feat_dim: int           # d — feature dimensionality
-    proj_dim: int           # k — rows of L (k <= d)
+    ``proj_dim`` and ``l_rank`` are two names for the same quantity —
+    the number of rows ``d_out`` of the learned (d_out, d_in) factor.
+    ``l_rank`` is the low-rank knob: set it below ``feat_dim`` and the
+    trained L is rectangular, which bounds rank(M) = rank(L^T L) and
+    shrinks every projected artifact downstream by feat_dim / l_rank.
+    Setting neither trains a square factor; setting both to different
+    values is an error.
+    """
+
+    feat_dim: int                     # d_in — feature dimensionality
+    proj_dim: Optional[int] = None    # d_out — rows of L (<= d_in)
     lam: float = 1.0        # lambda — dissimilar-pair tradeoff (paper: 1)
     margin: float = 1.0     # c — dissimilarity margin (paper: 1)
     dtype: jnp.dtype = jnp.float32
     # Compute policy: matmuls may run in bf16 on TPU while params stay fp32.
     compute_dtype: Optional[jnp.dtype] = None
+    # low-rank knob: alias for proj_dim (d_out of the rectangular factor)
+    l_rank: Optional[int] = None
 
     def __post_init__(self):
-        if self.proj_dim > self.feat_dim:
+        if (self.proj_dim is not None and self.l_rank is not None
+                and self.proj_dim != self.l_rank):
             raise ValueError(
-                f"proj_dim k={self.proj_dim} must be <= feat_dim d={self.feat_dim}"
-            )
+                f"proj_dim={self.proj_dim} and l_rank={self.l_rank} "
+                f"disagree; they name the same d_out — set one")
+        d_out = self.proj_dim if self.proj_dim is not None else self.l_rank
+        if d_out is None:
+            d_out = self.feat_dim           # square factor by default
+        object.__setattr__(self, "proj_dim", int(d_out))
+        if not 1 <= self.proj_dim <= self.feat_dim:
+            raise ValueError(
+                f"proj_dim d_out={self.proj_dim} must be in "
+                f"1..feat_dim d_in={self.feat_dim}")
 
 
 def init_params(cfg: DMLConfig, rng: jax.Array) -> jax.Array:
-    """Initialize L (k, d). Scaled Gaussian so initial distances are O(1)."""
+    """Initialize L (d_out, d_in). Scaled Gaussian so initial distances
+    are O(1)."""
     scale = 1.0 / np.sqrt(cfg.feat_dim)
     return scale * jax.random.normal(rng, (cfg.proj_dim, cfg.feat_dim), cfg.dtype)
 

@@ -4,6 +4,13 @@
 pair dataset, partitions it over workers (paper §4.1), builds the SPMD PS
 step for the requested consistency model and runs it, returning the merged
 metric plus the objective trace.
+
+Both loops are shape-agnostic in ``d_out``: the trained factor is whatever
+``DMLConfig.proj_dim`` / ``l_rank`` says — square (d, d) or low-rank
+rectangular (d', d) — and the PS update path (sync.py) treats L as an
+opaque pytree leaf, so rank never appears in the sync logic. A low-rank
+L drops straight into ``swap_metric`` / index builds; M = L^T L stays PSD
+by construction at any rank (no projection step anywhere).
 """
 
 from __future__ import annotations

@@ -19,6 +19,46 @@ LANE = 128      # TPU lane width: last-dim tiles round up to this
 SUBLANE = 8     # f32 sublane width: second-minor tiles round up to this
 
 
+def check_metric_factor(L, d_in=None, *, what: str = "L"):
+    """Validate the ``(d_out, d_in)`` metric-factor contract up front.
+
+    Every layer that touches a metric factor — projection, index build,
+    kernels — agrees that L is 2-D with raw features on the *second*
+    axis, and that rectangular ``d_out < d_in`` (a low-rank factor) is
+    as legal as square. Checking here, before any jit boundary, turns a
+    transposed / 1-D / wrong-dim factor into one clear ValueError
+    instead of an opaque dot-dimension error deep inside a traced
+    function. Shapes are static at trace time, so the check is also
+    safe to reach from inside jit.
+
+    Args:
+      L: candidate metric factor.
+      d_in: when given, the raw feature dimensionality the factor must
+        contract against (``L.shape[1] == d_in``).
+      what: name used in error messages.
+
+    Returns L unchanged.
+    """
+    shape = tuple(jnp.shape(L))
+    if len(shape) != 2:
+        raise ValueError(
+            f"{what} must be a 2-D (d_out, d_in) metric factor, got "
+            f"shape {shape}")
+    d_out, d = shape
+    if d_out < 1 or d < 1:
+        raise ValueError(
+            f"{what} must have d_out >= 1 and d_in >= 1, got shape "
+            f"{shape}")
+    if d_in is not None and d != d_in:
+        # rows matching the data dim is the transposed-factor signature
+        hint = (" — transposed factor? the contract is rows = d_out, "
+                "columns = d_in" if d_out == d_in else "")
+        raise ValueError(
+            f"{what} has d_in={d} but the data is {d_in}-dimensional; "
+            f"expected {what}.shape == (d_out, {d_in}){hint}")
+    return L
+
+
 def default_interpret(interpret=None) -> bool:
     """Resolve the ops-layer ``interpret`` knob: ``None`` (the default)
     compiles the kernel on TPU and interprets everywhere else; a bool

@@ -24,8 +24,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels._dispatch import (LANE, SUBLANE, default_interpret,
-                                     pad_axis, pick_block, round_up)
+from repro.kernels._dispatch import (LANE, SUBLANE, check_metric_factor,
+                                     default_interpret, pad_axis,
+                                     pick_block, round_up)
 from repro.kernels.metric_topk.kernel import BIG, metric_topk_fused
 from repro.kernels.metric_topk.ref import metric_topk_ref
 
@@ -34,8 +35,10 @@ def project_gallery(L, gallery):
     """Pre-project the gallery once: returns (gp (M,k) f32, gn (M,) f32).
 
     This is the index-build step that amortizes the learned metric — after
-    it, no query ever touches the d-dimensional space again.
+    it, no query ever touches the d-dimensional space again. ``L`` is
+    (d_out, d_in) — square or rectangular — and gp is sized d_out.
     """
+    check_metric_factor(L, jnp.shape(gallery)[-1])
     gp = gallery.astype(jnp.float32) @ L.astype(jnp.float32).T
     gn = jnp.sum(jnp.square(gp), axis=1)
     return gp, gn
@@ -55,9 +58,9 @@ def metric_topk(L, queries, gp, gn=None, *, k_top: int = 10,
     """Top-k gallery neighbors of raw queries under the metric L^T L.
 
     Args:
-      L: (k, d) metric factor.
-      queries: (Nq, d) raw queries.
-      gp: (M, k) pre-projected gallery (see project_gallery).
+      L: (d_out, d_in) metric factor — square or rectangular (low rank).
+      queries: (Nq, d_in) raw queries.
+      gp: (M, d_out) pre-projected gallery (see project_gallery).
       gn: optional (M,) precomputed gp row norms.
       interpret: None (default) compiles the kernel on TPU and interprets
         elsewhere; pass a bool to force.
@@ -66,6 +69,7 @@ def metric_topk(L, queries, gp, gn=None, *, k_top: int = 10,
     """
     interpret = default_interpret(interpret)
     Nq, d = queries.shape
+    check_metric_factor(L, d)
     M, k = gp.shape
     if k_top > M:
         raise ValueError(f"k_top={k_top} > gallery size M={M}")

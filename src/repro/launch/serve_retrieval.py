@@ -69,6 +69,11 @@ def main():
     ap.add_argument("--gallery-size", type=int, default=20000)
     ap.add_argument("--feat-dim", type=int, default=64)
     ap.add_argument("--proj-dim", type=int, default=32)
+    ap.add_argument("--l-rank", type=int, default=None,
+                    help="train a low-rank rectangular L with this many "
+                         "rows (d_out); overrides --proj-dim. The whole "
+                         "serving stack (projected gallery, PQ codes, "
+                         "snapshots) shrinks by feat_dim/l_rank")
     ap.add_argument("--n-classes", type=int, default=16)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--train-steps", type=int, default=200,
@@ -197,7 +202,9 @@ def main():
         n_samples=args.gallery_size, feat_dim=args.feat_dim,
         n_classes=args.n_classes, kind="noisy_subspace", noise=0.5, seed=0)
     feats, labels = pairdata.make_features(cfg)
-    dcfg = dml.DMLConfig(feat_dim=args.feat_dim, proj_dim=args.proj_dim)
+    if args.l_rank is not None:         # low-rank knob wins over proj-dim
+        args.proj_dim = args.l_rank
+    dcfg = dml.DMLConfig(feat_dim=args.feat_dim, l_rank=args.proj_dim)
     if args.train_steps > 0:
         train_pairs, _ = pairdata.train_eval_split(
             cfg, n_train_sim=4000, n_train_dis=4000,

@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--n-samples", type=int, default=8000)
     ap.add_argument("--feat-dim", type=int, default=64)
     ap.add_argument("--proj-dim", type=int, default=16)
+    ap.add_argument("--l-rank", type=int, default=None,
+                    help="low-rank d_out of the trained rectangular L; "
+                         "overrides --proj-dim")
     ap.add_argument("--n-classes", type=int, default=128)
     ap.add_argument("--noise", type=float, default=0.3)
     ap.add_argument("--steps", type=int, default=150)
@@ -86,7 +89,10 @@ def main():
         return eval_tasks.knn_accuracy(L, tr_x, tr_y, te_x, te_y, k=5)
 
     tcfg = DMLTrainConfig(
-        dml=dml.DMLConfig(feat_dim=args.feat_dim, proj_dim=args.proj_dim),
+        dml=dml.DMLConfig(
+            feat_dim=args.feat_dim,
+            l_rank=(args.l_rank if args.l_rank is not None
+                    else args.proj_dim)),
         ps=sync.PSConfig(n_workers=args.workers, sync=args.sync,
                          seed=args.seed),
         batch_size=args.batch, steps=args.steps, lr=args.lr,

@@ -360,6 +360,9 @@ class RetrievalEngine:
             "n_shards": self.index.n_shards,
             "backend": self.backend,
             "index": type(self.index).__name__,
+            # the (d_out, d_in) metric-factor contract: d_out sizes every
+            # projected/coded artifact, d_in is the raw feature dim
+            "l_shape": list(np.shape(self.index.L)),
             "cache_hits": self.cache_hits,
             "cache_misses": self.cache_misses,
             "cache_entries": len(self._cache),

@@ -109,7 +109,12 @@ class ExactIndex:
         enters here: compaction folds delta rows and snapshot load restores
         segments without ever re-projecting the gallery through L.
         """
+        scan.check_metric_factor(L)
         gp = jnp.asarray(gp, jnp.float32)
+        if gp.shape[1] != jnp.shape(L)[0]:
+            raise ValueError(
+                f"projected rows have dim {gp.shape[1]} but L is "
+                f"{tuple(jnp.shape(L))}; gp must be sized d_out")
         gn = jnp.asarray(gn, jnp.float32)
         axes: Tuple[str, ...] = ()
         if mesh is not None:

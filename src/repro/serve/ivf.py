@@ -240,9 +240,14 @@ class IVFIndex:
         if scan_impl not in scan.SCAN_IMPLS:
             raise ValueError(f"unknown scan_impl {scan_impl!r} "
                              f"({'|'.join(scan.SCAN_IMPLS)})")
+        scan.check_metric_factor(L)
         gp = jnp.asarray(gp, jnp.float32)
         gn = jnp.asarray(gn, jnp.float32)
         M, k = gp.shape
+        if k != jnp.shape(L)[0]:
+            raise ValueError(
+                f"projected rows have dim {k} but L is "
+                f"{tuple(jnp.shape(L))}; gp must be sized d_out")
         axes: Tuple[str, ...] = ()
         if mesh is not None:
             axes = scan.gallery_axes(mesh, None, rules)

@@ -99,7 +99,7 @@ class MutableIndex:
                 ">= 1 (exact base distances for the delta merge)")
         M = base.size
         self.base = base
-        self.L = jnp.asarray(L, jnp.float32)
+        self.L = jnp.asarray(scan.check_metric_factor(L), jnp.float32)
         self.base_ids = (np.arange(M, dtype=np.int64) if ids is None
                          else np.asarray(ids, np.int64).copy())
         if self.base_ids.shape != (M,):
@@ -498,7 +498,10 @@ class MutableIndex:
                 labelnames=("event",)).inc(event=name)
 
     def _reset_delta(self):
-        k = self.delta_gp.shape[1]
+        # fresh buffers size off the *current* L, not the old delta_gp:
+        # after a rank-changing swap_metric the old buffer's d_out is
+        # stale and new upserts (projected at the new rank) must fit
+        k = self.L.shape[0]
         self.delta_gp = np.zeros((0, k), np.float32)
         self.delta_gn = np.zeros((0,), np.float32)
         self.delta_ids = np.zeros((0,), np.int64)
@@ -696,6 +699,12 @@ class MutableIndex:
         half-projected gallery. One version bump at the end flushes the
         engine cache. Closes the trainer -> server loop.
 
+        ``L_new`` may have a *different rank* than the serving factor —
+        the retained raw rows make swapping square -> rectangular (or
+        back) legal; only ``d_in`` must keep matching the raw feature
+        dim. All projected state (base segments, delta buffer) comes
+        back sized at the new ``d_out``.
+
         (The flip itself is a few attribute writes, not one atomic store:
         like ``upsert``/``delete``/``compact``, calls must be serialized
         with in-flight ``topk`` calls by the caller — the engine/batcher
@@ -704,10 +713,9 @@ class MutableIndex:
         if self.raw_base is None:
             raise ValueError("swap_metric requires retain_raw=True at "
                              "build (raw features were not kept)")
+        scan.check_metric_factor(L_new, self.raw_base.shape[1],
+                                 what="L_new")
         L_new = jnp.asarray(L_new, jnp.float32)
-        if L_new.shape[1] != self.raw_base.shape[1]:
-            raise ValueError(f"L_new feature dim {L_new.shape[1]} != raw "
-                             f"feature dim {self.raw_base.shape[1]}")
         ids = np.concatenate([self.base_ids[~self.dead_base],
                               self.delta_ids[~self.dead_delta]])
         raw = np.concatenate([self.raw_base[~self.dead_base],
@@ -726,7 +734,10 @@ class MutableIndex:
             new_base = IVFPQIndex.build_projected(
                 L_new, gp, gn, n_clusters=self.base.n_clusters,
                 nprobe=self.base.nprobe,
-                n_subspaces=self.base.pq.n_subspaces,
+                # a lower-rank L may have fewer projected dims than the
+                # old code layout split over; PQ needs n_subspaces <= k
+                n_subspaces=min(self.base.pq.n_subspaces,
+                                int(L_new.shape[0])),
                 bits=self.base.pq.bits,
                 rerank_depth=self.base.rerank_depth,
                 store=self.base.store, scan_impl=self.base.scan_impl,

@@ -342,9 +342,14 @@ class IVFPQIndex:
             raise NotImplementedError(
                 "IVFPQIndex is single-shard (the rerank row store has no "
                 "mesh story; multi-host gallery is a ROADMAP item)")
+        scan.check_metric_factor(L)
         gp = jnp.asarray(gp, jnp.float32)
         gn = jnp.asarray(gn, jnp.float32)
         M, k = gp.shape
+        if k != jnp.shape(L)[0]:
+            raise ValueError(
+                f"projected rows have dim {k} but L is "
+                f"{tuple(jnp.shape(L))}; gp must be sized d_out")
         C = n_clusters
         if C > M:
             raise ValueError(f"n_clusters={C} > gallery size {M}")

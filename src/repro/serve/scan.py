@@ -34,8 +34,22 @@ from repro.sharding import partition
 
 
 def project_queries(L, queries):
-    """Project raw (Nq, d) queries into the k-dim metric space (f32)."""
+    """Project raw (Nq, d_in) queries into the d_out-dim metric space (f32).
+
+    ``L`` is the (d_out, d_in) metric factor — square or rectangular.
+    Validates the factor contract up front (shapes are static at trace
+    time, so this also fires with a clear error from inside jit instead
+    of an opaque dot-dimension failure)."""
+    check_metric_factor(L, jnp.shape(queries)[-1])
     return queries.astype(jnp.float32) @ L.astype(jnp.float32).T
+
+
+def check_metric_factor(L, d_in=None, *, what: str = "L"):
+    """Validate L against the (d_out, d_in) contract — see
+    kernels/_dispatch.check_metric_factor (the one copy every layer
+    shares); re-exported here because serve-side callers (index builds,
+    engine, CLI) reach it through the scan substrate."""
+    return _dispatch.check_metric_factor(L, d_in, what=what)
 
 
 SCAN_IMPLS = ("auto", "xla", "pallas")

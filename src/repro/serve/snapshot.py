@@ -240,6 +240,20 @@ def load_index(snapshot_dir: str, *, expect_L=None, registry=None):
         raise ValueError(f"snapshot format {manifest['format']} != "
                          f"supported {FORMAT}")
     if expect_L is not None:
+        # shape first: a rank-mismatched factor can never fingerprint-
+        # match, and the caller deserves the structural diagnosis (the
+        # snapshot was built at a different d_out/d_in), not a generic
+        # fingerprint complaint. Older manifests lack l_shape; only the
+        # fingerprint gate applies then.
+        saved_shape = manifest.get("l_shape")
+        expect_shape = list(np.asarray(expect_L).shape)
+        if saved_shape is not None and saved_shape != expect_shape:
+            raise ValueError(
+                f"snapshot metric factor has shape "
+                f"{tuple(saved_shape)} but expect_L is "
+                f"{tuple(expect_shape)}: rank-mismatched L (the gallery "
+                f"was projected at a different (d_out, d_in); load "
+                f"without expect_L and swap_metric, or rebuild)")
         got, want = manifest["l_fingerprint"], l_fingerprint(expect_L)
         if got != want:
             raise ValueError(
