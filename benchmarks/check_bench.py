@@ -20,7 +20,11 @@ key families are gated:
   ``queue_depth*``      lower is better: fail above
                         baseline / threshold + 1 (the +1 is absolute
                         slack so a 0 -> 1 blip on a drained queue does
-                        not fail).
+                        not fail);
+  ``recall*``           higher is better, ratio rule — the multi-tenant
+                        benchmark reports per-tenant recall@k vs an
+                        exact oracle, and an ANN view silently losing
+                        recall is a quality regression QPS won't show.
 
 New files, new keys, and structural mismatches (a resized sweep) are
 reported but never fail — only a like-for-like regression does. The
@@ -42,7 +46,8 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # key-prefix -> direction ("up" = higher is better)
-GATED = (("qps", "up"), ("cache_hit_rate", "up"), ("queue_depth", "down"))
+GATED = (("qps", "up"), ("cache_hit_rate", "up"), ("queue_depth", "down"),
+         ("recall", "up"))
 
 
 def iter_gated(node, path=""):

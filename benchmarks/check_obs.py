@@ -17,7 +17,9 @@ What is checked (schema, not values — check_bench.py gates values):
   metrics snapshot   top-level ``{"t", "counters", "gauges",
                      "histograms", "events"}``; every instrument has
                      ``help``/``labels``/``values``; every label key
-                     parses back to exactly the declared label names;
+                     parses back to exactly the declared label names
+                     (and any instrument declaring a ``tenant`` label
+                     carries a non-empty tenant value in every cell);
                      histogram cells carry ``len(buckets) + 1`` counts
                      whose sum equals ``count``; buckets ascend;
                      events are ``{"t", "event", ...}`` in time order.
@@ -89,6 +91,12 @@ def check_snapshot(snap: dict, where: str) -> list:
             if sorted(parsed) != sorted(declared):
                 err(f"{kind}[{name}] label key {lkey!r} parses to "
                     f"{sorted(parsed)}, declared {sorted(declared)}")
+            elif "tenant" in declared and not parsed.get("tenant"):
+                # tenant-scoped series (serve/tenant.py ScopedRegistry
+                # binding) must always say WHICH tenant — an empty
+                # tenant value means a write bypassed the scoping
+                err(f"{kind}[{name}] label key {lkey!r} has an empty "
+                    f"tenant label")
 
     for kind in ("counters", "gauges"):
         for name, m in snap[kind].items():

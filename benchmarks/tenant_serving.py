@@ -1,0 +1,222 @@
+"""Multi-tenant serving: N metrics over ONE shared gallery, gated.
+
+The tenant router's pitch (serve/tenant.py) is that N learned metrics
+can serve off one resident copy of the raw gallery — each tenant pays
+only its (d_out-sized) projected view — without giving up per-tenant
+answer quality. This benchmark makes that claim falsifiable on a
+3-tenant set with deliberately mixed backends:
+
+  t_exact   full-scan ExactIndex view, low-rank L;
+  t_ivf     cluster-pruned IVFIndex view, its own L;
+  t_pq      IVFPQIndex view (ADC + exact rerank), wider L.
+
+Mixed traffic (round-robin across tenants, unique noisy queries) runs
+through the RequestScheduler front end via per-tenant routes — batches
+never mix tenants — and per-tenant QPS + recall@10 against that
+tenant's own exact-scan oracle are measured and written to
+``BENCH_tenant.json`` (gated direction-aware by check_bench.py: qps*
+and recall* up, queue_depth* down). The registry snapshot is embedded
+for check_obs.py, which also asserts every tenant-scoped series carries
+a non-empty ``tenant`` label.
+
+Pinned claims (CI runs ``--smoke`` on every push):
+
+  * recall@10 >= 0.9 for EVERY tenant vs its own exact oracle over the
+    shared rows (the ANN views trade work, not correctness);
+  * total resident bytes (shared raw store once + all views, via
+    ``obs.index_memory``) <= 0.6x three independent stacks (each
+    holding its own raw copy + view) — the multi-tenant memory win;
+  * shadow promotion is **bit-identical** to a fresh build: after
+    ``promote()``, the promoted tenant answers exactly like a second
+    router that registered the candidate L directly (same deterministic
+    build path a trainer-side ``swap_metric`` rebuild takes);
+  * zero silent drops: submitted == completed for every tenant (the
+    run is sized inside the admission caps).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _factors(rng, d_in):
+    """Three distinct low-rank factors (d_out, d_in), one per tenant."""
+    return {
+        "t_exact": (0.2 * rng.randn(d_in // 4, d_in)).astype(np.float32),
+        "t_ivf": (0.2 * rng.randn(d_in // 4, d_in)).astype(np.float32),
+        "t_pq": (0.2 * rng.randn(d_in // 2, d_in)).astype(np.float32),
+    }
+
+
+def _backends(n_clusters, rerank):
+    return {
+        "t_exact": ("exact", {}),
+        "t_ivf": ("ivf", dict(n_clusters=n_clusters, nprobe=n_clusters)),
+        "t_pq": ("ivfpq", dict(n_clusters=n_clusters, nprobe=n_clusters,
+                               rerank_depth=rerank)),
+    }
+
+
+def main(smoke: bool = False, out: str | None = None):
+    from repro.obs import index_memory
+    from repro.serve import (ExactIndex, RequestScheduler, RetrievalEngine,
+                             TenantRouter)
+
+    k = 10
+    if smoke:       # CI-sized: seconds, same code paths + claims
+        m, d_in, n_queries, n_clusters = 4000, 48, 240, 16
+    else:
+        m, d_in, n_queries, n_clusters = 20000, 64, 1200, 32
+    rerank = 8 * k
+    rng = np.random.RandomState(0)
+    n_blobs = 24
+    centers = rng.randn(n_blobs, d_in).astype(np.float32) * 2.0
+    feats = (centers[rng.randint(0, n_blobs, m)]
+             + 0.5 * rng.randn(m, d_in)).astype(np.float32)
+    factors = _factors(rng, d_in)
+    backends = _backends(n_clusters, rerank)
+    names = sorted(factors)
+
+    router = TenantRouter(feats, k_top=k)
+    t0 = time.perf_counter()
+    for name in names:
+        backend, kw = backends[name]
+        router.add_tenant(name, factors[name], backend=backend,
+                          build_kwargs=kw, deadline_s=30.0)
+        router.warm(name)
+        router.tenant(name).engine.warmup()
+    build_s = time.perf_counter() - t0
+
+    # exact-scan oracle per tenant over the same shared rows
+    oracles = {name: RetrievalEngine(
+        ExactIndex.build(factors[name], feats), k_top=k)
+        for name in names}
+
+    # scheduler front end: default engine is t_exact's (already
+    # tenant-scoped, so no unscoped engine_* series leak onto the base
+    # registry); degrade off — quality knobs would move recall
+    sched = RequestScheduler(router.tenant(names[0]).engine,
+                             registry=router.registry, max_batch=32,
+                             max_wait_ms=1.0, degrade=False)
+    router.attach_scheduler(sched)
+
+    queries = (feats[rng.randint(0, m, n_queries)]
+               + 0.1 * rng.randn(n_queries, d_in)).astype(np.float32)
+    t0 = time.perf_counter()
+    futs = [(names[i % len(names)], i,
+             router.submit(names[i % len(names)], queries[i]))
+            for i in range(n_queries)]
+    per = {name: {"completed": 0, "recall_sum": 0.0} for name in names}
+    for name, i, fut in futs:
+        _, ids = fut.result(timeout=120)
+        _, o_ids = oracles[name].search(queries[i])
+        per[name]["completed"] += 1
+        per[name]["recall_sum"] += (
+            len(set(ids.tolist()) & set(np.asarray(o_ids).tolist())) / k)
+    wall = time.perf_counter() - t0
+    depth_end = sched.observability()["queue_depth"]
+
+    # memory claim: router (raw once + views) vs independent stacks
+    # (each tenant holding its own raw copy + the same view)
+    mem = router.memory()
+    raw_bytes = mem["gallery"]
+    view_bytes = {name: int(sum(
+        index_memory(router.tenant(name).engine.index).values()))
+        for name in names}
+    independent = sum(raw_bytes + v for v in view_bytes.values())
+    ratio = mem["total"] / independent
+
+    tenants = {}
+    print("tenant,backend,completed,qps,recall_at_10")
+    for name in names:
+        n_done = per[name]["completed"]
+        recall = per[name]["recall_sum"] / max(n_done, 1)
+        qps = n_done / wall
+        sub = n_queries // len(names) + (n_queries % len(names) > 0)
+        tenants[name] = {
+            "backend": backends[name][0],
+            "completed": n_done,
+            "qps": qps,
+            "recall_at_10": recall,
+            "view_bytes": view_bytes[name],
+        }
+        print(f"tenant,{backends[name][0]},{n_done},{qps:.0f},"
+              f"{recall:.3f}")
+        assert n_done >= n_queries // len(names), \
+            f"{name}: {n_done} completed of ~{sub} submitted (drops)"
+        assert recall >= 0.9, \
+            f"{name}: recall@{k} {recall:.3f} < 0.9 vs its exact oracle"
+    assert ratio <= 0.6, \
+        f"memory ratio {ratio:.3f} > 0.6 (router {mem['total']} B vs " \
+        f"independent {independent} B)"
+
+    # shadow promotion == fresh build, bit for bit: promote a candidate
+    # L on the IVF tenant, then compare against a second router that
+    # registered the candidate directly (same deterministic build)
+    L_cand = (0.2 * np.random.RandomState(7)
+              .randn(d_in // 4, d_in)).astype(np.float32)
+    router.register_shadow("t_ivf", L_cand, sample_rate=1.0)
+    for q in queries[:8]:
+        router.search("t_ivf", q)       # mirrored: arm gathers evidence
+    arm_stats = router.tenant("t_ivf").shadow.stats()
+    router.promote("t_ivf")
+    fresh = TenantRouter(feats, k_top=k)
+    fresh.add_tenant("fresh", L_cand, backend="ivf",
+                     build_kwargs=backends["t_ivf"][1])
+    probe = queries[:32]
+    d_live, i_live = router.search("t_ivf", probe)
+    d_fresh, i_fresh = fresh.search("fresh", probe)
+    bit_identical = (np.array_equal(i_live, i_fresh)
+                     and np.array_equal(d_live, d_fresh))
+    assert bit_identical, "promoted view differs from a fresh build"
+    print(f"promote: bit-identical to fresh build over {len(probe)} "
+          f"probes (shadow overlap {arm_stats['overlap_at_k']:.3f}, "
+          f"mirrored {arm_stats['n_mirrored']})")
+    print(f"memory: router {mem['total'] / 1e6:.2f} MB vs independent "
+          f"{independent / 1e6:.2f} MB ({ratio:.3f}x, gallery "
+          f"{raw_bytes / 1e6:.2f} MB resident once)")
+
+    sched.close()
+    out = out or os.path.join(REPO, "BENCH_tenant.json")
+    payload = {
+        "bench": "tenant_serving", "smoke": smoke,
+        "params": {"gallery_rows": m, "d_in": d_in,
+                   "n_queries": n_queries, "k": k,
+                   "n_clusters": n_clusters, "rerank_depth": rerank,
+                   "build_s": build_s},
+        "tenants": tenants,
+        "memory": {"router_bytes": mem["total"],
+                   "independent_bytes": independent,
+                   "ratio": ratio},
+        "promote_bit_identical": bool(bit_identical),
+        "shadow": arm_stats,
+        # unified-obs block: gated keys + the registry snapshot
+        # (schema-validated in CI by benchmarks/check_obs.py, which
+        # also asserts tenant labels are never empty)
+        "obs": {"queue_depth_end": depth_end,
+                "registry": router.registry.snapshot()},
+    }
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (same code paths and claims)")
+    ap.add_argument("--out", default=None,
+                    help="BENCH json path (default: repo root)")
+    a = ap.parse_args()
+    main(smoke=a.smoke, out=a.out)

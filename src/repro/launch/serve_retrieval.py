@@ -151,6 +151,18 @@ def main():
     ap.add_argument("--restore-window-ms", type=float, default=500.0,
                     help="scheduler: sustained drain before stepping "
                          "back up")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="after the main run, stand up a TenantRouter "
+                         "serving this many metrics over ONE shared raw "
+                         "gallery (tenant 0 serves this run's L; the "
+                         "rest get seeded low-rank factors) and report "
+                         "per-tenant purity + the shared-gallery memory "
+                         "ratio vs independent stacks")
+    ap.add_argument("--shadow", action="store_true",
+                    help="with --tenants: register this run's L as a "
+                         "shadow arm behind tenant 1, mirror the tenant "
+                         "traffic through it, report overlap/latency "
+                         "deltas, and promote it live")
     ap.add_argument("--metrics-out", default=None,
                     help="write the final MetricsRegistry snapshot (JSON) "
                          "here — launch/metrics_report.py renders it")
@@ -164,6 +176,11 @@ def main():
     if not 0.0 <= args.trace_sample <= 1.0:
         ap.error(f"--trace-sample must be in [0, 1], got "
                  f"{args.trace_sample}")
+    if args.shadow and args.tenants < 2:
+        ap.error("--shadow needs --tenants >= 2 (tenant 1 hosts the arm)")
+    if args.tenants and args.data > 1:
+        ap.error("--tenants is single-shard (incompatible with "
+                 "--data > 1)")
     if args.index in ("ivf", "ivfpq") and args.backend == "pallas":
         ap.error(f"--index {args.index} only supports --backend xla (the "
                  "fused pallas kernel serves the exact full-scan path)")
@@ -325,6 +342,24 @@ def main():
         if len(known):
             purity.append(float(np.mean(labels[known] == labels[qid])))
     wall = time.perf_counter() - t0
+
+    # --- hard-pair mining against the live engine ------------------------
+    # before front.close(): under --scheduler the miner rides the front
+    # end's ``mining`` priority class (admission + deadlines shape the
+    # mining load exactly like third-tier traffic), so the front door
+    # must still be open. k_neighbors is sized so the mined k equals
+    # --k — the scheduler rejects k above the engine's k_top.
+    mine_stats = None
+    if args.mine > 0:
+        from repro.mining import HardPairMiner, MinerConfig
+        use_front = args.scheduler and args.k >= 3
+        miner = HardPairMiner(
+            engine, feats, labels,
+            MinerConfig(k_neighbors=(args.k - 1 if use_front
+                                     else max(args.k, 5))),
+            frontend=front if use_front else None)
+        mine_stats = miner.mine(n_queries=args.mine, seed=2).stats
+        mine_stats["via_scheduler"] = use_front
     front.close()
 
     from repro.obs import percentile
@@ -365,19 +400,16 @@ def main():
               f"{n_rejected} rejected at admission, "
               f"{n_expired} expired in queue")
 
-    # --- hard-pair mining against the live engine ------------------------
-    if args.mine > 0:
-        from repro.mining import HardPairMiner, MinerConfig
-        miner = HardPairMiner(
-            engine, feats, labels,
-            MinerConfig(k_neighbors=max(args.k, 5)))
-        res = miner.mine(n_queries=args.mine, seed=2)
-        ms = res.stats
-        print(f"mining: {ms['n_pairs']} hard pairs from "
+    if mine_stats is not None:
+        ms = mine_stats
+        via = ("scheduler mining class" if ms["via_scheduler"]
+               else "direct engine path")
+        print(f"mining ({via}): {ms['n_pairs']} hard pairs from "
               f"{ms['n_queries']} anchors (neg yield "
               f"{ms['neg_yield']:.2f}/q, pos yield "
               f"{ms['pos_yield']:.2f}/q, {ms['n_semi_hard']} semi-hard, "
-              f"{ms['n_fallback_neg']} fallback) in "
+              f"{ms['n_fallback_neg']} fallback, {ms['n_dropped']} shed "
+              f"by the front end) in "
               f"{ms['mine_busy_s']:.2f}s device time — engine now at "
               f"{ms['engine_qps']:.0f} qps over "
               f"{engine.stats()['n_device_queries']} device queries")
@@ -402,6 +434,59 @@ def main():
         if args.snapshot_dir:
             save_index(index, args.snapshot_dir)
             print(f"post-churn snapshot saved to {args.snapshot_dir}")
+
+    # --- multi-tenant serving over the shared gallery --------------------
+    if args.tenants > 0:
+        from repro.serve import TenantRouter
+        # fresh registry: the main engine's series are unscoped, tenant
+        # engines label everything with tenant=... — one registry cannot
+        # carry both shapes of the same metric name
+        router = TenantRouter(feats, k_top=args.k)
+        backends = {"exact": {}, "ivf": ivf_kw, "ivfpq": ivfpq_kw}
+        for i in range(args.tenants):
+            if i == 0:
+                ti_L = np.asarray(L, np.float32)
+            else:       # seeded low-rank factors standing in for other
+                        # surfaces' trained metrics
+                t_rng = np.random.RandomState(100 + i)
+                ti_L = t_rng.randn(
+                    max(args.proj_dim // 2, 2),
+                    args.feat_dim).astype(np.float32) * 0.1
+            router.add_tenant(f"t{i}", ti_L, backend=args.index,
+                              build_kwargs=backends[args.index])
+        if args.shadow:
+            router.register_shadow("t1", np.asarray(L, np.float32),
+                                   sample_rate=0.5)
+        t_qids = rng.randint(0, len(feats), 64)
+        for i, qid in enumerate(t_qids):
+            name = f"t{i % args.tenants}"
+            _, nbr = router.search(name, noisy[qid % args.requests]
+                                   if args.requests else feats[qid])
+        tob = router.observability()
+        mem = tob["memory"]
+        # the multi-tenant win: raw rows resident once, not per tenant
+        per_tenant = mem["gallery"] + max(mem["tenants"].values())
+        ratio = mem["total"] / max(per_tenant * args.tenants, 1)
+        print(f"tenants: {args.tenants} metrics over one "
+              f"{tob['gallery_rows']}-row gallery; resident "
+              f"{mem['total'] / 1e6:.1f} MB vs ~"
+              f"{per_tenant * args.tenants / 1e6:.1f} MB for "
+              f"independent stacks ({ratio:.2f}x)")
+        for name in sorted(tob["tenants"]):
+            tb = tob["tenants"][name]
+            print(f"  {name}: backend={tb['backend']} "
+                  f"l_shape={tb['l_shape']} requests={tb['n_requests']} "
+                  f"warm={tb['warm']}")
+        if args.shadow:
+            arm = router.tenant("t1").shadow
+            st_sh = arm.stats()
+            print(f"  shadow@t1: mirrored {st_sh['n_mirrored']} "
+                  f"(rate {st_sh['sample_rate']}), overlap@{args.k} "
+                  f"{st_sh['overlap_at_k']:.3f}, latency ratio "
+                  f"{st_sh['latency_ratio']:.2f}")
+            router.promote("t1")
+            print(f"  promoted shadow -> t1 live "
+                  f"(fingerprint {router.tenant('t1').fingerprint})")
 
     # --- obs export ------------------------------------------------------
     if args.metrics_out:

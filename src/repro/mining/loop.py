@@ -88,15 +88,38 @@ class ClosedLoopTrainer:
 
     def __init__(self, cfg: ClosedLoopConfig, features, labels, *,
                  opt: Optional[Optimizer] = None, mesh=None,
-                 engine: Optional[RetrievalEngine] = None):
+                 engine: Optional[RetrievalEngine] = None,
+                 router=None, tenant: Optional[str] = None,
+                 shadow_probe: int = 8):
         """Build the serving stack and the mined source (no training yet).
 
         ``engine`` lets a caller share an existing serving engine (its
         index must be over ``features`` with row ids 0..n-1); by default
         the trainer stands up its own index of ``cfg.index`` kind under
         the *initial* L — the first refresh replaces that metric.
+
+        ``router`` + ``tenant`` close the loop through the multi-tenant
+        front end (serve/tenant.py): each metric-swapping refresh also
+        registers the fresh L as the tenant's *shadow arm*, mirrors
+        ``shadow_probe`` seeded anchor queries through it (so the arm
+        carries overlap/latency evidence, visible in the registry and
+        the refresh record), then promotes it live — the serving
+        tenant's metric tracks training without ever serving a view the
+        shadow machinery didn't build.
         """
         self.cfg = cfg
+        if (router is None) != (tenant is None):
+            raise ValueError("pass router and tenant together (or "
+                             "neither)")
+        self.router = router
+        self.tenant = tenant
+        self.shadow_probe = shadow_probe
+        if router is not None:
+            router.tenant(tenant)   # unknown tenant fails here, not at
+            if router.d_in != np.asarray(features).shape[1]:   # refresh
+                raise ValueError(
+                    f"router gallery d_in={router.d_in} != feature "
+                    f"dim {np.asarray(features).shape[1]}")
         self.features = np.asarray(features, np.float32)
         self.labels = np.asarray(labels)
         self.opt = opt or sgd(cfg.train.lr)
@@ -174,6 +197,30 @@ class ClosedLoopTrainer:
                 if sp is not None:
                     sp.set_attrs(kind=self.cfg.index,
                                  rows=self.engine.index.size).end()
+        shadow_stats = None
+        if swap and self.router is not None:
+            # A/B the fresh metric through the tenant's shadow arm:
+            # mirror a few seeded anchors for overlap/latency evidence,
+            # then promote — the router's deterministic build makes the
+            # promoted view identical to a fresh rebuild under L
+            p_sp = trace.span("promote") if trace is not None else None
+            arm = self.router.register_shadow(self.tenant,
+                                              np.asarray(L, np.float32),
+                                              sample_rate=1.0)
+            probe_rng = np.random.RandomState(
+                self.cfg.train.ps.seed + self.n_refreshes)
+            probes = probe_rng.randint(
+                0, len(self.features),
+                size=min(self.shadow_probe, len(self.features)))
+            for qid in probes:
+                self.router.search(self.tenant, self.features[qid])
+            shadow_stats = arm.stats()
+            self.router.promote(self.tenant)
+            if p_sp is not None:
+                p_sp.set_attrs(tenant=self.tenant,
+                               n_mirrored=shadow_stats["n_mirrored"],
+                               overlap_at_k=shadow_stats["overlap_at_k"]
+                               ).end()
         m_sp = trace.span("mine") if trace is not None else None
         result = self.miner.mine(n_queries=self.cfg.mine_queries,
                                  seed=self.cfg.train.ps.seed
@@ -196,6 +243,9 @@ class ClosedLoopTrainer:
         if trace is not None:
             self.tracer.finish(trace)
         rec = {"step": step, "refresh": self.n_refreshes, **result.stats}
+        if shadow_stats is not None:
+            rec["shadow"] = shadow_stats
+            rec["promoted_tenant"] = self.tenant
         self.refreshes.append(rec)
         return rec
 

@@ -119,7 +119,8 @@ class HardPairMiner:
 
     def __init__(self, engine, features, labels,
                  cfg: Optional[MinerConfig] = None, *,
-                 query_batch: int = 512, warmup: bool = True):
+                 query_batch: int = 512, warmup: bool = True,
+                 frontend=None):
         """Args:
           engine: a RetrievalEngine, or any MetricIndex (wrapped in a
             fresh engine here — pass an engine to share its cache/stats
@@ -133,11 +134,24 @@ class HardPairMiner:
           warmup: pre-compile the (bucket, k_neighbors + 1) query fns up
             front (the engine-warmup reuse serve_retrieval's
             --warmup-ks flag provides for serving clients).
+          frontend: optional RequestScheduler over the same engine —
+            mining queries then ride its ``mining`` priority class
+            instead of calling the engine directly, so serving traffic
+            shapes (and can shed) the mining load. Anchors the front end
+            rejects or expires mine nothing this sweep (counted in
+            stats["n_dropped"]; the loop retries them next epoch).
         """
         self.cfg = cfg or MinerConfig()
         if not isinstance(engine, RetrievalEngine):
             engine = RetrievalEngine(engine, k_top=self.cfg.k_neighbors + 1)
         self.engine = engine
+        self.frontend = frontend
+        if frontend is not None and self.cfg.k_neighbors + 1 > engine.k_top:
+            raise ValueError(
+                f"k_neighbors + 1 = {self.cfg.k_neighbors + 1} exceeds "
+                f"the front end's engine k_top={engine.k_top}; the "
+                f"scheduler rejects oversized k (size the engine or "
+                f"shrink the neighborhood)")
         self.features = np.asarray(features, np.float32)
         self.labels = np.asarray(labels)
         if self.labels.shape[0] != self.features.shape[0]:
@@ -160,6 +174,10 @@ class HardPairMiner:
             self._c_starved = self.registry.counter(
                 "miner_starved_total",
                 "anchors that yielded no pair at all")
+            self._c_dropped = self.registry.counter(
+                "miner_dropped_total",
+                "anchors shed by the traffic front end (rejected or "
+                "deadline-expired under the mining class)")
         # class -> row ids, for hard-positive candidate sampling
         order = np.argsort(self.labels, kind="stable")
         classes, starts = np.unique(self.labels[order], return_index=True)
@@ -173,6 +191,37 @@ class HardPairMiner:
                                        self.engine.index.size)])
 
     # -- mining --------------------------------------------------------------
+
+    def _neighborhoods(self, qid, k):
+        """(dists (n,k), ids (n,k), served (n,) bool) for one anchor
+        chunk. Direct engine path by default; with a front end attached,
+        per-anchor futures through its ``mining`` priority class —
+        anchors the scheduler sheds (queue full, deadline expired, or a
+        failed batch) come back unserved and are skipped this sweep."""
+        feats = self.features[qid]
+        if self.frontend is None:
+            d, i = self.engine.search(feats, k_top=k)
+            return (np.asarray(d), np.asarray(i),
+                    np.ones(len(qid), bool))
+        futs = []
+        for row in feats:
+            try:
+                futs.append(self.frontend.submit(row, k_top=k,
+                                                 priority="mining"))
+            except Exception:       # RejectedError: admission shed it
+                futs.append(None)
+        dists = np.full((len(qid), k), np.inf, np.float32)
+        ids = np.full((len(qid), k), -1, np.int64)
+        served = np.zeros(len(qid), bool)
+        for row, fut in enumerate(futs):
+            if fut is None:
+                continue
+            try:
+                dists[row], ids[row] = fut.result()
+                served[row] = True
+            except Exception:       # expired / cancelled / batch failed
+                pass
+        return dists, ids, served
 
     def mine(self, query_ids=None, n_queries: Optional[int] = None,
              seed: int = 0) -> MiningResult:
@@ -202,11 +251,18 @@ class HardPairMiner:
 
         a_out, b_out, sim_out = [], [], []
         n_hard_neg = n_semi = n_fallback = n_hard_pos = n_starved = 0
+        n_dropped = 0
         t_busy0 = self.engine.busy_s
         n_dev0 = self.engine.n_device_queries
         for s in range(0, len(query_ids), self.query_batch):
             qid = query_ids[s:s + self.query_batch]
-            dists, ids = self.engine.search(self.features[qid], k_top=k)
+            dists, ids, served = self._neighborhoods(qid, k)
+            n_dropped += int((~served).sum())
+            if not served.all():    # shed anchors mine nothing (a row
+                qid = qid[served]   # of -1s would fake hard positives)
+                dists, ids = dists[served], ids[served]
+            if len(qid) == 0:
+                continue
             a, b, sim, st = self._filter(qid, np.asarray(dists),
                                          np.asarray(ids), rng)
             a_out.append(a)
@@ -219,8 +275,13 @@ class HardPairMiner:
             n_starved += st["starved"]
         self.n_mines += 1
 
-        pairs = {"a": np.concatenate(a_out), "b": np.concatenate(b_out),
-                 "sim": np.concatenate(sim_out).astype(np.int32)}
+        pairs = {
+            "a": (np.concatenate(a_out) if a_out
+                  else np.zeros(0, np.int64)),
+            "b": (np.concatenate(b_out) if b_out
+                  else np.zeros(0, np.int64)),
+            "sim": (np.concatenate(sim_out).astype(np.int32) if sim_out
+                    else np.zeros(0, np.int32))}
         nq = max(len(query_ids), 1)
         est = self.engine.stats()
         # QPS over *this mine's* device queries, not the engine's
@@ -236,6 +297,7 @@ class HardPairMiner:
             "n_fallback_neg": int(n_fallback),
             "n_hard_pos": int(n_hard_pos),
             "n_starved": int(n_starved),
+            "n_dropped": int(n_dropped),
             "neg_yield": n_hard_neg / nq,
             "pos_yield": n_hard_pos / nq,
             "mine_busy_s": busy,
@@ -246,6 +308,7 @@ class HardPairMiner:
             self._c_mines.inc()
             self._c_queries.inc(stats["n_queries"])
             self._c_starved.inc(stats["n_starved"])
+            self._c_dropped.inc(stats["n_dropped"])
             for kind, key in (("hard_neg", "n_hard_neg"),
                               ("semi_hard", "n_semi_hard"),
                               ("fallback_neg", "n_fallback_neg"),

@@ -19,7 +19,7 @@ snapshots, miner, and the closed loop all share one registry/tracer pair
 
 from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS,  # noqa: F401
                                Counter, Gauge, Histogram, MetricsRegistry,
-                               index_memory, log_buckets, merge_snapshots,
-                               parse_label_key, percentile)
+                               ScopedRegistry, index_memory, log_buckets,
+                               merge_snapshots, parse_label_key, percentile)
 from repro.obs.trace import (NULL_SPAN, NullSpan, Span,  # noqa: F401
                              Trace, Tracer, span_names)

@@ -329,6 +329,11 @@ class MetricsRegistry:
         with self._lock:
             self._collectors.append(fn)
 
+    def scoped(self, **bound) -> "ScopedRegistry":
+        """A write view of this registry with label values pre-bound
+        (``registry.scoped(tenant="a")``) — see ScopedRegistry below."""
+        return ScopedRegistry(self, **bound)
+
     # -- structured events ---------------------------------------------------
 
     def event(self, name: str, **attrs) -> None:
@@ -429,6 +434,153 @@ class MetricsRegistry:
             json.dump(snap, f, indent=2, sort_keys=True)
             f.write("\n")
         return snap
+
+
+class _BoundInstrument:
+    """Instrument facade with some labels pre-bound (e.g. tenant=...).
+
+    Forwards every read/write to the underlying registry instrument with
+    the bound labels merged in, so a subsystem written against unlabeled
+    instruments (the engine's ``engine_requests_total`` et al.) records
+    per-scope series without knowing it is scoped. Explicit labels at the
+    call site may not collide with bound ones — that would silently
+    reattribute another scope's traffic."""
+
+    __slots__ = ("_inst", "_bound")
+
+    def __init__(self, inst, bound: dict):
+        self._inst = inst
+        self._bound = dict(bound)
+
+    def _merge(self, labels: dict) -> dict:
+        clash = set(labels) & set(self._bound)
+        if clash:
+            raise ValueError(f"labels {sorted(clash)} are bound by the "
+                             f"scope and cannot be overridden")
+        return {**self._bound, **labels}
+
+    # Counter / Gauge surface
+    def inc(self, by: float = 1.0, **labels):
+        return self._inst.inc(by, **self._merge(labels))
+
+    def set(self, value: float, **labels):
+        return self._inst.set(value, **self._merge(labels))
+
+    def value(self, **labels):
+        return self._inst.value(**self._merge(labels))
+
+    def total(self):
+        return self._inst.total()
+
+    # Histogram surface
+    def observe(self, value: float, **labels):
+        return self._inst.observe(value, **self._merge(labels))
+
+    def counts(self, **labels):
+        return self._inst.counts(**self._merge(labels))
+
+    def count(self, **labels):
+        return self._inst.count(**self._merge(labels))
+
+    def sum(self, **labels):
+        return self._inst.sum(**self._merge(labels))
+
+    def percentile(self, q: float, **labels):
+        return self._inst.percentile(q, **self._merge(labels))
+
+    @property
+    def name(self):
+        return self._inst.name
+
+    @property
+    def labelnames(self):
+        return self._inst.labelnames
+
+    @property
+    def buckets(self):
+        return self._inst.buckets
+
+
+class ScopedRegistry:
+    """A MetricsRegistry view with label values bound up front.
+
+    ``registry.scoped(tenant="a")`` returns a facade whose
+    ``counter``/``gauge``/``histogram`` calls create the instrument on the
+    *base* registry with the bound label names prepended to the declared
+    ones, and hand back a ``_BoundInstrument`` that merges the bound
+    values into every operation. Two scopes of the same base registry
+    therefore share one instrument per name (identical labelnames — no
+    get-or-create collision) while their series stay separated by label.
+    This is how N per-tenant engines record ``engine_*`` metrics onto one
+    router registry as ``engine_requests_total{tenant=...}``.
+
+    Collectors and events forward to the base (events gain the bound
+    attrs); ``snapshot``/``exposition``/``write_snapshot`` read the whole
+    base registry — a scope is a *write* view, not a filtered read.
+    """
+
+    def __init__(self, base: "MetricsRegistry", **bound):
+        if not bound:
+            raise ValueError("a scope needs at least one bound label")
+        while isinstance(base, ScopedRegistry):   # scopes of scopes flatten
+            bound = {**base.bound, **bound}
+            base = base.base
+        for name in bound:
+            if name in _RESERVED:
+                raise ValueError(f"label name {name!r} is reserved")
+        self.base = base
+        self.bound = {k: str(v) for k, v in bound.items()}
+        self.clock = base.clock
+
+    def scoped(self, **bound) -> "ScopedRegistry":
+        return ScopedRegistry(self, **bound)
+
+    def _bound_names(self, labelnames) -> Tuple[str, ...]:
+        extra = tuple(labelnames)
+        clash = set(extra) & set(self.bound)
+        if clash:
+            raise ValueError(f"labelnames {sorted(clash)} are already "
+                             f"bound by the scope")
+        return tuple(self.bound) + extra
+
+    def counter(self, name: str, help: str = "",
+                labelnames: Iterable[str] = ()) -> _BoundInstrument:
+        return _BoundInstrument(
+            self.base.counter(name, help, self._bound_names(labelnames)),
+            self.bound)
+
+    def gauge(self, name: str, help: str = "",
+              labelnames: Iterable[str] = ()) -> _BoundInstrument:
+        return _BoundInstrument(
+            self.base.gauge(name, help, self._bound_names(labelnames)),
+            self.bound)
+
+    def histogram(self, name: str, help: str = "",
+                  labelnames: Iterable[str] = (),
+                  buckets: Optional[Sequence[float]] = None
+                  ) -> _BoundInstrument:
+        return _BoundInstrument(
+            self.base.histogram(name, help, self._bound_names(labelnames),
+                                buckets=buckets),
+            self.bound)
+
+    def register_collector(self, fn) -> None:
+        self.base.register_collector(fn)
+
+    def event(self, name: str, **attrs) -> None:
+        self.base.event(name, **{**self.bound, **attrs})
+
+    def events(self, name: Optional[str] = None) -> list:
+        return self.base.events(name)
+
+    def snapshot(self) -> dict:
+        return self.base.snapshot()
+
+    def exposition(self) -> str:
+        return self.base.exposition()
+
+    def write_snapshot(self, path: str) -> dict:
+        return self.base.write_snapshot(path)
 
 
 def merge_snapshots(a: dict, b: dict) -> dict:

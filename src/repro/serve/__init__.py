@@ -33,3 +33,7 @@ from repro.serve.pq import IVFPQIndex, ProductQuantizer  # noqa: F401
 from repro.serve.scan import recall_at_k  # noqa: F401
 from repro.serve.snapshot import (has_snapshot, l_fingerprint,  # noqa: F401
                                   load_index, save_index)
+from repro.serve.tenant import (ShadowArm, Tenant,  # noqa: F401
+                                TenantError, TenantFingerprintError,
+                                TenantRouter, attach_view, load_tenants,
+                                save_tenants)

@@ -180,13 +180,16 @@ class _ClassStats:
 def default_ladder(index, k_top: int, n_levels: int = 3) -> Tuple[dict, ...]:
     """Derive a quality ladder from the index's own knobs.
 
-    Level 0 is always ``{}`` (build-time quality). Each deeper level
-    halves ``nprobe`` (floored so ``k_top`` still fits in the scanned
-    candidate pool) and, for PQ bases, halves the exact-rerank pool
-    (floored at ``k_top`` — IVFPQ clamps there anyway, and MutableIndex
-    rejects ``rerank=0``). Indexes with no knobs (ExactIndex) get the
-    single full-quality level: the controller then has nothing to trade,
-    and admission control alone carries overload.
+    Level 0 is always ``{}`` (build-time quality). For PQ bases the first
+    rung shrinks only the exact-rerank pool (``rerank`` halved, floored at
+    ``k_top`` — IVFPQ clamps there anyway, and MutableIndex rejects
+    ``rerank=0``): the rerank gather is the cheapest lever, and cutting
+    it leaves the ADC candidate scan untouched, so recall dips least per
+    unit of saved compute. Each deeper level then halves ``nprobe``
+    (floored so ``k_top`` still fits in the scanned candidate pool)
+    together with the rerank pool. Indexes with no knobs (ExactIndex)
+    get the single full-quality level: the controller then has nothing
+    to trade, and admission control alone carries overload.
     """
     base = getattr(index, "base", index)       # MutableIndex wraps
     nprobe = getattr(base, "nprobe", None)
@@ -196,9 +199,13 @@ def default_ladder(index, k_top: int, n_levels: int = 3) -> Tuple[dict, ...]:
     nprobe_floor = max(1, -(-k_top // cap))    # ceil(k_top / cap)
     rerank = getattr(base, "rerank_depth", None)
     ladder = [{}]
+    if rerank:                                 # 0 = ADC-only build: leave
+        knobs = {"rerank": max(k_top, rerank >> 1)}
+        if knobs["rerank"] < rerank:           # already at the floor: skip
+            ladder.append(knobs)
     for step in range(1, n_levels):
         knobs = {"nprobe": max(nprobe_floor, nprobe >> step)}
-        if rerank:                             # 0 = ADC-only build: leave
+        if rerank:
             knobs["rerank"] = max(k_top, rerank >> step)
         if ladder[-1] != knobs:                # stop once floored flat
             ladder.append(knobs)
@@ -295,6 +302,10 @@ class _Request:
     t_deadline: float
     trace: object = None        # obs.Trace minted at submit (or None)
     q_span: object = None       # open "queue" span, ended at dequeue
+    route: object = None        # tenant route name (None = default engine)
+
+
+_ANY_ROUTE = object()           # _pop_live_locked sentinel: no route filter
 
 
 class RequestScheduler:
@@ -312,7 +323,8 @@ class RequestScheduler:
                  ladder: Optional[Sequence[dict]] = None,
                  high_watermark: int = 32, low_watermark: int = 4,
                  degrade_window_s: float = 0.05,
-                 restore_window_s: float = 0.5):
+                 restore_window_s: float = 0.5,
+                 registry: Optional[obs_metrics.MetricsRegistry] = None):
         if n_workers < 1:
             raise ValueError(f"n_workers must be >= 1, got {n_workers}")
         names = [c.name for c in classes]
@@ -324,8 +336,12 @@ class RequestScheduler:
         self.clock = clock if clock is not None else SystemClock()
         # share the engine's registry/tracer when it has them (the real
         # RetrievalEngine always does), so the whole stack records into
-        # one instance; a bare test double gets a private registry
-        reg = getattr(engine, "registry", None)
+        # one instance; a bare test double gets a private registry. An
+        # explicit ``registry`` overrides — a multi-tenant front end
+        # (serve/tenant.py) serves tenant-scoped engines but its own
+        # frontend_* metrics belong on the unscoped base registry.
+        reg = (registry if registry is not None
+               else getattr(engine, "registry", None))
         self.registry = (reg if reg is not None
                          else obs_metrics.MetricsRegistry(clock=self.clock))
         self.tracer = getattr(engine, "tracer", None)
@@ -350,8 +366,21 @@ class RequestScheduler:
         self._g_level = self.registry.gauge(
             "frontend_degradation_level",
             "current quality-ladder level (0 = full quality)")
+        self._c_tenant = self.registry.counter(
+            "frontend_tenant_requests_total",
+            "front-end requests by tenant route and outcome",
+            labelnames=("tenant", "outcome"))
         self.registry.register_collector(self._collect_gauges)
         self.batch_sizes: collections.deque = collections.deque(maxlen=4096)
+        # tenant routes: name -> (engine, per-route LoadController). A
+        # routed submit validates and serves against its route's engine;
+        # batches never mix routes (one engine call per batch).
+        self._routes: Dict[object, tuple] = {}
+        self._ctrl_kw = dict(high_watermark=high_watermark,
+                             low_watermark=low_watermark,
+                             degrade_window_s=degrade_window_s,
+                             restore_window_s=restore_window_s)
+        self._degrade = degrade
         if degrade:
             lad = (tuple(ladder) if ladder is not None
                    else default_ladder(engine.index, engine.k_top))
@@ -392,6 +421,47 @@ class RequestScheduler:
     def n_batches(self) -> int:
         return int(self._c_batches.value())
 
+    # -- tenant routes -------------------------------------------------------
+
+    def add_route(self, name: str, engine: RetrievalEngine,
+                  ladder: Optional[Sequence[dict]] = None) -> None:
+        """Register a tenant route: submits with ``route=name`` validate
+        against and are served by ``engine``, under a per-route quality
+        ladder (derived from the route engine's own index unless given).
+        Re-registering a name repoints it (the tenant router does this
+        after a promotion rebuilds a view)."""
+        ctrl = None
+        if self._degrade:
+            lad = (tuple(ladder) if ladder is not None
+                   else default_ladder(engine.index, engine.k_top))
+            ctrl = LoadController(lad, self.clock, **self._ctrl_kw)
+        with self._cond:
+            self._routes[name] = (engine, ctrl)
+
+    def routes(self) -> tuple:
+        with self._cond:
+            return tuple(self._routes)
+
+    def _resolve_route(self, route):
+        """(engine, controller) serving ``route`` (None = the default)."""
+        if route is None:
+            return self.engine, self.controller
+        with self._cond:
+            entry = self._routes.get(route)
+        if entry is None:
+            raise ValueError(f"unknown route {route!r} "
+                             f"(have {sorted(map(str, self._routes))})")
+        return entry
+
+    def _settle(self, r: _Request, outcome: str) -> None:
+        """Terminal bookkeeping for one request: class counters, the
+        per-tenant outcome counter (routed requests only), and trace
+        close — every resolution path funnels here."""
+        self._stats[r.cls.name].bump(outcome)
+        if r.route is not None:
+            self._c_tenant.inc(tenant=str(r.route), outcome=outcome)
+        self._finish_trace(r, outcome)
+
     def _finish_trace(self, r: _Request, outcome: str) -> None:
         """Close a request's trace (no-op for untraced requests): end the
         queue span if still open, stamp the outcome, hand the tree to the
@@ -406,7 +476,8 @@ class RequestScheduler:
 
     def submit(self, query, k_top: Optional[int] = None,
                priority: str = "interactive",
-               deadline_s: Optional[float] = None) -> Future:
+               deadline_s: Optional[float] = None,
+               route: Optional[str] = None) -> Future:
         """Enqueue one (d,) query under a priority class.
 
         Returns a Future resolving to (dists (k,), ids (k,)). Admission
@@ -414,23 +485,26 @@ class RequestScheduler:
         never holds a queue slot. An admitted request always resolves:
         result, ``DeadlineExceededError``, engine exception, or client
         cancellation. ``deadline_s`` overrides the class default
-        (relative to now; must be > 0).
+        (relative to now; must be > 0). ``route`` targets a tenant route
+        registered with ``add_route`` (validation and service happen
+        against that route's engine; batches never mix routes).
         """
         cls = self._classes.get(priority)
         if cls is None:
             raise ValueError(f"unknown priority class {priority!r} "
                              f"(have {list(self._classes)})")
-        k = self.engine.k_top if k_top is None else k_top
+        engine, _ = self._resolve_route(route)
+        k = engine.k_top if k_top is None else k_top
         if k < 1:
             raise ValueError(f"k_top must be >= 1, got {k}")
-        if k > self.engine.k_top:
+        if k > engine.k_top:
             raise ValueError(f"k_top={k} > engine k_top="
-                             f"{self.engine.k_top}")
+                             f"{engine.k_top}")
         dl = cls.deadline_s if deadline_s is None else deadline_s
         if dl <= 0:
             raise ValueError(f"deadline_s must be > 0, got {dl}")
         q = np.asarray(query, np.float32)
-        d = self.engine.index.L.shape[1]
+        d = engine.index.L.shape[1]
         if q.shape != (d,):     # reject here, not in the shared worker
             raise ValueError(f"query shape {q.shape} != ({d},)")
         st = self._stats[cls.name]
@@ -446,15 +520,19 @@ class RequestScheduler:
                     f"with backoff or shed load upstream")
             now = self.clock.now()
             fut: Future = Future()
-            r = _Request(q, k, fut, cls, now, now + dl)
+            r = _Request(q, k, fut, cls, now, now + dl, route=route)
             if self.tracer is not None and self.tracer.sample_rate > 0:
                 # the trace id is minted here, at admission; the "queue"
                 # span stays open until a worker dequeues the request
                 r.trace = self.tracer.start_trace("request")
                 r.trace.root.set_attrs(cls=cls.name, k=k)
+                if route is not None:
+                    r.trace.root.set_attrs(tenant=str(route))
                 r.q_span = r.trace.span("queue")
             queue.append(r)
             st.bump("admitted")
+            if route is not None:
+                self._c_tenant.inc(tenant=str(route), outcome="admitted")
             self._cond.notify_all()
         return fut
 
@@ -474,11 +552,9 @@ class RequestScheduler:
                             r.fut.set_exception(
                                 RejectedError("scheduler closed before "
                                               "the request was served"))
-                            self._stats[name].bump("rejected")
-                            self._finish_trace(r, "rejected")
+                            self._settle(r, "rejected")
                         else:
-                            self._stats[name].bump("cancelled")
-                            self._finish_trace(r, "cancelled")
+                            self._settle(r, "cancelled")
             self._cond.notify_all()
         for t in self._threads:
             t.join(timeout=timeout)
@@ -489,16 +565,23 @@ class RequestScheduler:
     def _depth_locked(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
-    def _pop_live_locked(self) -> Optional[_Request]:
+    def _pop_live_locked(self, route=_ANY_ROUTE) -> Optional[_Request]:
         """Pop the highest-priority non-expired request, failing expired
-        ones fast (typed error; they never occupy a batch slot)."""
+        ones fast (typed error; they never occupy a batch slot). With a
+        ``route`` filter, only requests of that route are considered —
+        others stay queued in place (their FIFO position is preserved;
+        their deadlines are judged when they are actually popped)."""
         now = self.clock.now()
         for name, queue in self._queues.items():   # ascending priority
-            while queue:
-                r = queue.popleft()
+            i = 0
+            while i < len(queue):
+                r = queue[i]
+                if route is not _ANY_ROUTE and r.route != route:
+                    i += 1
+                    continue
+                del queue[i]
                 if r.fut.cancelled():   # client walked away while queued
-                    self._stats[name].bump("cancelled")
-                    self._finish_trace(r, "cancelled")
+                    self._settle(r, "cancelled")
                     continue
                 if r.t_deadline <= now:
                     if r.fut.set_running_or_notify_cancel():
@@ -506,11 +589,9 @@ class RequestScheduler:
                             f"{name} deadline "
                             f"{r.t_deadline - r.t_submit:.3f}s expired "
                             f"in queue"))
-                        self._stats[name].bump("expired")
-                        self._finish_trace(r, "expired")
+                        self._settle(r, "expired")
                     else:
-                        self._stats[name].bump("cancelled")
-                        self._finish_trace(r, "cancelled")
+                        self._settle(r, "cancelled")
                     continue
                 return r
         return None
@@ -519,7 +600,9 @@ class RequestScheduler:
         """Form one batch: highest-priority-first, FIFO within a class,
         waiting at most ``max_wait_s`` past the first member — and never
         past any collected member's deadline (deadline-aware formation:
-        idling a member into expiry would waste its admission)."""
+        idling a member into expiry would waste its admission). The first
+        member fixes the batch's route: one batch is one engine call, so
+        riders must share its engine."""
         with self._cond:
             batch: list = []
             while not batch:
@@ -530,9 +613,10 @@ class RequestScheduler:
                 if self._closed:
                     return None
                 self.clock.wait_on(self._cond, None)
+            route = batch[0].route
             wait_until = self.clock.now() + self.max_wait_s
             while len(batch) < self.max_batch:
-                r = self._pop_live_locked()
+                r = self._pop_live_locked(route)
                 if r is not None:
                     batch.append(r)
                     continue
@@ -564,24 +648,27 @@ class RequestScheduler:
         live = []
         for r in batch:
             if not r.fut.set_running_or_notify_cancel():
-                self._stats[r.cls.name].bump("cancelled")
-                self._finish_trace(r, "cancelled")
+                self._settle(r, "cancelled")
             elif r.t_deadline <= now:   # expired during batch formation
                 r.fut.set_exception(DeadlineExceededError(
                     f"{r.cls.name} deadline expired during batch "
                     f"formation"))
-                self._stats[r.cls.name].bump("expired")
-                self._finish_trace(r, "expired")
+                self._settle(r, "expired")
             else:
                 if r.q_span is not None:
                     r.q_span.end()      # dequeued: queue wait is over
                 live.append(r)
         if not live:
             return
-        if self.controller is not None:
+        # routed batches serve their route's engine under its own quality
+        # ladder (_collect guarantees one route per batch); pressure is
+        # still judged on the TOTAL queue depth — one worker drains every
+        # route, so the backlog any route sees is the shared one
+        engine, controller = self._resolve_route(live[0].route)
+        if controller is not None:
             with self._cond:
                 depth = self._depth_locked()
-            knobs = self.controller.observe(depth)
+            knobs = controller.observe(depth)
         else:
             knobs = {}
         # one batch serves many requests but the engine takes one span:
@@ -593,26 +680,27 @@ class RequestScheduler:
         b_span = e_span = None
         if carrier is not None:
             b_span = carrier.trace.span("batch").set_attrs(
-                size=len(live), level=(0 if self.controller is None
-                                       else self.controller.level),
+                size=len(live), level=(0 if controller is None
+                                       else controller.level),
                 **{f"knob_{k}": v for k, v in knobs.items()})
+            if live[0].route is not None:
+                b_span.set_attrs(tenant=str(live[0].route))
             e_span = carrier.trace.span("engine", parent=b_span)
         try:
             qs = np.stack([r.q for r in live])
             with self._engine_lock:
                 if e_span is not None:
-                    dists, idxs = self.engine.search(qs, span=e_span,
-                                                     **knobs)
+                    dists, idxs = engine.search(qs, span=e_span,
+                                                **knobs)
                 else:
-                    dists, idxs = self.engine.search(qs, **knobs)
+                    dists, idxs = engine.search(qs, **knobs)
         except Exception as e:          # fail every rider, keep serving
             if b_span is not None:
                 e_span.set_attrs(error=repr(e)).end()
                 b_span.end()
             for r in live:              # already RUNNING: resolve directly
                 r.fut.set_exception(e)
-                self._stats[r.cls.name].bump("failed")
-                self._finish_trace(r, "failed")
+                self._settle(r, "failed")
             return
         if b_span is not None:
             e_span.end()
@@ -624,9 +712,8 @@ class RequestScheduler:
         for row, r in enumerate(live):
             st = self._stats[r.cls.name]
             r.fut.set_result((dists[row, :r.k], idxs[row, :r.k]))
-            st.bump("completed")
             st.record_latency(done - r.t_submit)
-            self._finish_trace(r, "completed")
+            self._settle(r, "completed")
 
     # -- warmup / observability ---------------------------------------------
 
@@ -661,7 +748,7 @@ class RequestScheduler:
             snap["queue_depth"] = depths[name]
             classes[name] = snap
         ctrl = self.controller
-        return {
+        out = {
             "classes": classes,
             "queue_depth": sum(depths.values()),
             "rejections": sum(c["rejected"] for c in classes.values()),
@@ -674,5 +761,13 @@ class RequestScheduler:
             "n_transitions": (0 if ctrl is None
                               else len(ctrl.transitions)),
         }
+        tenants: Dict[str, Dict[str, int]] = {}
+        for key in self._c_tenant.label_keys():
+            labels = dict(obs_metrics.parse_label_key(key))
+            per = tenants.setdefault(labels["tenant"], {})
+            per[labels["outcome"]] = int(self._c_tenant.value(**labels))
+        if tenants:
+            out["tenants"] = tenants
+        return out
 
     stats = observability

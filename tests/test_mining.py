@@ -281,3 +281,136 @@ class TestConvergenceSmoke:
         acc_m = eval_tasks.knn_accuracy(L_m, tr_x, tr_y, te_x, te_y, k=5)
         assert hist["summary"]["n_refreshes"] >= 4
         assert acc_m >= acc_u - 0.02, (acc_m, acc_u)
+
+
+class TestMinerFrontend:
+    def test_frontend_routed_mining_equals_direct(self):
+        """Mining through the scheduler's ``mining`` class must produce
+        the exact same pairs as hitting the engine directly — the front
+        end shapes the load, it must not change the answers."""
+        from repro.serve import RequestScheduler
+        x, y = _blobs(n=300)
+        k = 10
+        L = np.eye(x.shape[1], dtype=np.float32)
+        engine = RetrievalEngine(ExactIndex.build(L, x), k_top=k + 1)
+        cfg = MinerConfig(k_neighbors=k, max_negatives=2,
+                          max_positives=2)
+        direct = HardPairMiner(engine, x, y, cfg, warmup=False)
+        r_direct = direct.mine(n_queries=64, seed=3)
+
+        sched = RequestScheduler(engine, max_wait_ms=0.0, degrade=False)
+        try:
+            routed = HardPairMiner(engine, x, y, cfg, warmup=False,
+                                   frontend=sched)
+            r_routed = routed.mine(n_queries=64, seed=3)
+        finally:
+            sched.close()
+        assert r_routed.stats["n_dropped"] == 0
+        for key in ("a", "b", "sim"):
+            np.testing.assert_array_equal(r_direct.pairs[key],
+                                          r_routed.pairs[key])
+
+    def test_shed_anchors_mine_nothing_and_are_counted(self):
+        """Anchors the front end rejects come back unserved: they must
+        be dropped (never mined into fake pairs) and counted."""
+        from concurrent.futures import Future
+        x, y = _blobs(n=300)
+        k = 10
+        L = np.eye(x.shape[1], dtype=np.float32)
+        engine = RetrievalEngine(ExactIndex.build(L, x), k_top=k + 1)
+
+        class SheddingFrontend:
+            """Every 2nd submit rejected at admission, like a full
+            mining queue would."""
+            def __init__(self):
+                self.n = 0
+
+            def submit(self, row, k_top, priority):
+                self.n += 1
+                if self.n % 2 == 0:
+                    raise RuntimeError("queue full")
+                fut = Future()
+                d, i = engine.search(row, k_top=k_top)
+                fut.set_result((d, i))
+                return fut
+
+        cfg = MinerConfig(k_neighbors=k, max_negatives=2,
+                          max_positives=2)
+        m = HardPairMiner(engine, x, y, cfg, warmup=False,
+                          frontend=SheddingFrontend())
+        res = m.mine(n_queries=64, seed=3)
+        assert res.stats["n_dropped"] == 32
+        assert res.n_pairs > 0
+        # every surviving pair references only SERVED anchors — no -1
+        # ids or inf distances leaked into the pair set
+        assert (res.pairs["a"] >= 0).all() and (res.pairs["b"] >= 0).all()
+
+    def test_oversized_neighborhood_rejected_with_frontend(self):
+        from repro.serve import RequestScheduler
+        x, y = _blobs(n=100)
+        engine = RetrievalEngine(ExactIndex.build(
+            np.eye(x.shape[1], dtype=np.float32), x), k_top=5)
+        sched = RequestScheduler(engine, max_wait_ms=0.0, degrade=False)
+        try:
+            with pytest.raises(ValueError, match="k_top"):
+                HardPairMiner(engine, x, y,
+                              MinerConfig(k_neighbors=10),
+                              warmup=False, frontend=sched)
+        finally:
+            sched.close()
+
+
+class TestClosedLoopRouter:
+    def _cfg(self, d=8, **kw):
+        return ClosedLoopConfig(
+            train=DMLTrainConfig(dml=dml.DMLConfig(feat_dim=d, proj_dim=4),
+                                 ps=sync.PSConfig(n_workers=1),
+                                 batch_size=64, steps=10, lr=1e-2,
+                                 log_every=10),
+            miner=MinerConfig(k_neighbors=10),
+            schedule=CurriculumSchedule(warmup_steps=2, ramp_steps=4,
+                                        max_mined_frac=0.5),
+            mine_queries=64, refresh_every=10, **kw)
+
+    def test_refresh_promotes_through_shadow(self):
+        """A metric-swapping refresh registers the fresh L as the
+        tenant's shadow arm, mirrors probe traffic, and promotes — the
+        serving tenant's metric tracks training via the shadow path."""
+        from repro.serve import TenantRouter
+        x, y = _blobs(n=200, d=8, c=4)
+        router = TenantRouter(x, k_top=10)
+        router.add_tenant("prod", np.eye(8, dtype=np.float32))
+        router.search("prod", x[0])
+        fp0 = router.tenant("prod").fingerprint
+
+        clt = ClosedLoopTrainer(self._cfg(), x, y, router=router,
+                                tenant="prod", shadow_probe=4)
+        L_new = (0.1 * np.random.RandomState(3)
+                 .randn(4, 8)).astype(np.float32)
+        rec = clt.refresh(L_new, step=10)
+        assert rec["promoted_tenant"] == "prod"
+        assert rec["shadow"]["n_mirrored"] >= 1
+        t = router.tenant("prod")
+        assert t.fingerprint != fp0 and t.shadow is None
+        np.testing.assert_array_equal(t.L, L_new)
+        # the live tenant now answers under the promoted metric
+        _, ids = router.search("prod", x[:3])
+        eng = RetrievalEngine(ExactIndex.build(L_new, x), k_top=10)
+        _, o_ids = eng.search(x[:3])
+        np.testing.assert_array_equal(ids, np.asarray(o_ids))
+
+    def test_router_validation(self):
+        from repro.serve import TenantRouter
+        x, y = _blobs(n=120, d=8, c=4)
+        router = TenantRouter(x)
+        router.add_tenant("prod", np.eye(8, dtype=np.float32))
+        with pytest.raises(ValueError, match="together"):
+            ClosedLoopTrainer(self._cfg(), x, y, router=router)
+        with pytest.raises(Exception):
+            ClosedLoopTrainer(self._cfg(), x, y, router=router,
+                              tenant="nope")
+        wrong = TenantRouter(np.zeros((50, 6), np.float32))
+        wrong.add_tenant("prod", np.eye(6, dtype=np.float32))
+        with pytest.raises(ValueError, match="d_in"):
+            ClosedLoopTrainer(self._cfg(), x, y, router=wrong,
+                              tenant="prod")

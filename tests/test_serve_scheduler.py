@@ -250,12 +250,23 @@ class TestDegradation:
         ivf = SimpleNamespace(nprobe=8, cap=16)
         assert default_ladder(ivf, k_top=10) == (
             {}, {"nprobe": 4}, {"nprobe": 2})
+        # PQ bases get a rerank-only first rung: halving the exact-refine
+        # depth is the cheapest quality lever, so try it before touching
+        # recall-critical nprobe
         pq = SimpleNamespace(nprobe=8, cap=16, rerank_depth=64)
         assert default_ladder(pq, k_top=10) == (
-            {}, {"nprobe": 4, "rerank": 32}, {"nprobe": 2, "rerank": 16})
-        # rerank floors at k_top, nprobe floors at ceil(k_top / cap)
+            {}, {"rerank": 32},
+            {"nprobe": 4, "rerank": 32}, {"nprobe": 2, "rerank": 16})
+        # rerank floors at k_top (so the rung vanishes when the build
+        # depth is already at the floor), nprobe floors at
+        # ceil(k_top / cap)
         assert default_ladder(pq, k_top=40, n_levels=4) == (
-            {}, {"nprobe": 4, "rerank": 40}, {"nprobe": 3, "rerank": 40})
+            {}, {"rerank": 40},
+            {"nprobe": 4, "rerank": 40}, {"nprobe": 3, "rerank": 40})
+        assert default_ladder(SimpleNamespace(nprobe=8, cap=16,
+                                              rerank_depth=10),
+                              k_top=10) == (
+            {}, {"nprobe": 4, "rerank": 10}, {"nprobe": 2, "rerank": 10})
         # MutableIndex wrapper: knobs come from .base
         wrapped = SimpleNamespace(base=ivf)
         assert default_ladder(wrapped, k_top=10) == (
@@ -511,5 +522,82 @@ class TestStressInterleavings:
             with pytest.raises(CancelledError):
                 doomed.result(timeout=30)
             assert 1 not in eng.served_ids()
+        finally:
+            assert sched.close()
+
+
+class TestTenantRoutes:
+    def test_routed_batches_never_mix_and_serve_route_engine(self):
+        eng = FakeEngine(d=D)
+        route_eng = FakeEngine(d=D)
+        sched = _scheduler(eng, FakeClock(), max_batch=16, degrade=False)
+        try:
+            sched.add_route("a", route_eng)
+            assert sched.routes() == ("a",)
+            plug = _plug(eng, sched)
+            futs = [sched.submit(make_query(D, rid),
+                                 route=("a" if rid % 2 else None))
+                    for rid in range(1, 7)]
+            eng.gate.set()
+            route_eng.gate.set()
+            for f in futs:
+                f.result(timeout=30)
+            plug.result(timeout=30)
+            # every request served by ITS route's engine, no cross-talk
+            assert set(eng.served_ids()) == {999, 2, 4, 6}
+            assert set(route_eng.served_ids()) == {1, 3, 5}
+            # and no single engine call mixed routes (batch purity):
+            # each engine only ever saw its own population, per call
+            for ids, _ in route_eng.calls:
+                assert all(i % 2 for i in ids)
+        finally:
+            assert sched.close()
+
+    def test_route_validation_and_unknown_route(self):
+        eng = FakeEngine(d=D)
+        small = FakeEngine(d=D, k_top=2)    # tighter k than the default
+        sched = _scheduler(eng, FakeClock(), degrade=False)
+        try:
+            sched.add_route("small", small)
+            with pytest.raises(ValueError, match="unknown route"):
+                sched.submit(make_query(D, 1), route="nope")
+            # k validated against the ROUTE engine, not the default
+            with pytest.raises(ValueError, match="k_top"):
+                sched.submit(make_query(D, 1), k_top=5, route="small")
+            sched.submit(make_query(D, 1), k_top=5)     # default: fine
+        finally:
+            assert sched.close()
+
+    def test_tenant_outcomes_in_observability(self):
+        eng = FakeEngine(d=D)
+        route_eng = FakeEngine(d=D)
+        sched = _scheduler(eng, FakeClock(), degrade=False)
+        try:
+            sched.add_route("a", route_eng)
+            plug = _plug(eng, sched)
+            futs = [sched.submit(make_query(D, rid), route="a")
+                    for rid in (1, 2)]
+            eng.gate.set()
+            route_eng.gate.set()
+            for f in futs:
+                f.result(timeout=30)
+            plug.result(timeout=30)
+            tn = sched.observability()["tenants"]["a"]
+            assert tn["admitted"] == 2
+            assert tn["completed"] == 2
+        finally:
+            assert sched.close()
+
+    def test_pq_route_gets_rerank_first_rung(self):
+        eng = FakeEngine(d=D)
+        pq_eng = FakeEngine(d=D)
+        pq_eng.index = SimpleNamespace(
+            L=np.zeros((2, D), np.float32), version=0, size=1000,
+            n_shards=1, nprobe=8, cap=16, rerank_depth=64)
+        sched = _scheduler(eng, FakeClock(), degrade=True)
+        try:
+            sched.add_route("pq", pq_eng)
+            _, ctrl = sched._resolve_route("pq")
+            assert ctrl.ladder[1] == {"rerank": 32}     # cheapest lever
         finally:
             assert sched.close()

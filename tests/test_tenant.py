@@ -1,0 +1,293 @@
+"""Tenant router tests: N metrics over one shared gallery.
+
+Everything is sized tiny (M ~ 120 rows, d_in = 8) and seeded, so view
+builds are fast and deterministic — which is exactly the property the
+promote-equals-fresh-build oracle leans on.
+"""
+
+import numpy as np
+import pytest
+
+from repro.obs import MetricsRegistry
+from repro.serve import (ExactIndex, RequestScheduler, RetrievalEngine,
+                         TenantError, TenantFingerprintError, TenantRouter,
+                         attach_view, load_tenants, save_tenants)
+
+M, D = 120, 8
+K = 5
+
+
+@pytest.fixture
+def feats():
+    rng = np.random.RandomState(0)
+    return rng.randn(M, D).astype(np.float32)
+
+
+def _L(seed, d_out=4):
+    return (0.3 * np.random.RandomState(seed)
+            .randn(d_out, D)).astype(np.float32)
+
+
+def _router(feats, **kw):
+    kw.setdefault("k_top", K)
+    return TenantRouter(feats, **kw)
+
+
+def _oracle(L, feats, q, k=K):
+    """Exact top-k over ALL rows under metric L, as (dists, ids)."""
+    eng = RetrievalEngine(ExactIndex.build(L, feats), k_top=k)
+    return eng.search(q)
+
+
+IVF_KW = dict(n_clusters=4, nprobe=4)
+
+
+class TestServing:
+    @pytest.mark.parametrize("backend,kw", [
+        ("exact", {}), ("ivf", IVF_KW)])
+    def test_search_matches_exact_oracle(self, feats, backend, kw):
+        router = _router(feats)
+        router.add_tenant("a", _L(1), backend=backend, build_kwargs=kw)
+        q = feats[3] + 0.01
+        dists, ids = router.search("a", q)
+        o_dists, o_ids = _oracle(_L(1), feats, q)
+        np.testing.assert_array_equal(ids, o_ids)
+        np.testing.assert_allclose(dists, o_dists, rtol=1e-5)
+
+    def test_lazy_warm_and_idempotence(self, feats):
+        router = _router(feats)
+        t = router.add_tenant("a", _L(1))
+        assert not t.warm and t.engine is None
+        router.search("a", feats[0])        # first query builds
+        assert t.warm
+        eng = t.engine
+        router.warm("a")                    # fresh: no rebuild
+        assert t.engine is eng
+        assert router.observability()["tenants"]["a"]["warm"]
+
+    def test_per_tenant_caches_never_collide(self, feats):
+        """The SAME query bytes against two tenants must hit two
+        different caches and return each tenant's own answer."""
+        router = _router(feats)
+        router.add_tenant("a", _L(1))
+        router.add_tenant("b", _L(2))
+        q = feats[7] + 0.02
+        _, ids_a = router.search("a", q)
+        _, ids_b = router.search("b", q)
+        assert not np.array_equal(ids_a, ids_b), \
+            "distinct metrics should rank differently (test setup)"
+        # repeat: both hits, each from its OWN cache, answers unchanged
+        _, ids_a2 = router.search("a", q)
+        _, ids_b2 = router.search("b", q)
+        np.testing.assert_array_equal(ids_a, ids_a2)
+        np.testing.assert_array_equal(ids_b, ids_b2)
+        for name in ("a", "b"):
+            st = router.tenant(name).engine.stats()
+            assert st["cache_hits"] == 1 and st["cache_misses"] == 1
+
+    def test_submit_via_scheduler_equals_direct_search(self, feats):
+        router = _router(feats)
+        router.add_tenant("a", _L(1), deadline_s=30.0)
+        router.add_tenant("b", _L(2), backend="ivf", build_kwargs=IVF_KW,
+                          deadline_s=30.0)
+        sched = RequestScheduler(router.warm("a").engine,
+                                 registry=router.registry,
+                                 max_wait_ms=0.0, degrade=False)
+        router.attach_scheduler(sched)
+        try:
+            qs = feats[:6] + 0.01
+            futs = [(name, i, router.submit(name, qs[i]))
+                    for i, name in enumerate(["a", "b", "a", "b", "a",
+                                              "b"])]
+            for name, i, fut in futs:
+                dists, ids = fut.result(timeout=30)
+                o_dists, o_ids = router.search(name, qs[i])
+                np.testing.assert_array_equal(ids, o_ids)
+                np.testing.assert_allclose(dists, o_dists, rtol=1e-5)
+            assert set(sched.routes()) == {"a", "b"}
+        finally:
+            sched.close()
+
+    def test_submit_without_scheduler_raises(self, feats):
+        router = _router(feats)
+        router.add_tenant("a", _L(1))
+        with pytest.raises(TenantError, match="scheduler"):
+            router.submit("a", feats[0])
+
+
+class TestGalleryMutation:
+    def test_extend_gives_stable_ids_and_staleness(self, feats):
+        router = _router(feats)
+        router.add_tenant("a", _L(1))
+        router.warm("a")
+        gen0 = router.generation
+        new = np.full((3, D), 9.0, np.float32)
+        new_ids = router.extend(new)
+        np.testing.assert_array_equal(new_ids, [M, M + 1, M + 2])
+        assert router.generation == gen0 + 1
+        assert router.observability()["tenants"]["a"]["stale"]
+        # a query near the new rows must now find them, by stable id
+        _, ids = router.search("a", new[0])
+        assert set(new_ids.tolist()) <= set(ids.tolist())
+
+    def test_remove_tombstones_and_ids_survive(self, feats):
+        router = _router(feats)
+        router.add_tenant("a", _L(1))
+        q = feats[3] + 0.001
+        _, ids = router.search("a", q)
+        victim = int(ids[0])
+        assert router.remove([victim]) == 1
+        assert router.remove([victim]) == 0     # already dead
+        _, ids2 = router.search("a", q)         # lazy rebuild
+        assert victim not in ids2.tolist()
+        # survivors keep their original ids (positions in the store)
+        assert set(ids2.tolist()) <= set(range(M)) - {victim}
+        with pytest.raises(TenantError, match="out of range"):
+            router.remove([M + 50])
+
+
+class TestShadow:
+    def test_deterministic_sampling_and_overlap(self, feats):
+        router = _router(feats)
+        router.add_tenant("a", _L(1))
+        arm = router.register_shadow("a", _L(1), sample_rate=0.5)
+        for i in range(8):
+            router.search("a", feats[i] + 0.01)
+        # rate 0.5 -> exactly every 2nd request mirrored, no RNG
+        assert arm.n_mirrored == 4
+        # identical L => identical answers => overlap exactly 1.0
+        assert arm.stats()["overlap_at_k"] == 1.0
+        snap = router.registry.snapshot()
+        mirrored = snap["counters"]["shadow_mirrored_total"]["values"]
+        assert mirrored == {"tenant=a": 4.0}
+
+    def test_promote_is_bit_identical_to_fresh_build(self, feats):
+        router = _router(feats)
+        router.add_tenant("a", _L(1), backend="ivf", build_kwargs=IVF_KW)
+        router.search("a", feats[0])
+        L_cand = _L(9)
+        router.register_shadow("a", L_cand, sample_rate=1.0)
+        router.search("a", feats[1])            # mirrored once
+        t = router.promote("a")
+        assert t.shadow is None
+        assert t.fingerprint != _router(feats).add_tenant(
+            "x", _L(1)).fingerprint
+        fresh = _router(feats)
+        fresh.add_tenant("f", L_cand, backend="ivf", build_kwargs=IVF_KW)
+        probe = feats[:16] + 0.01
+        d_live, i_live = router.search("a", probe)
+        d_fresh, i_fresh = fresh.search("f", probe)
+        np.testing.assert_array_equal(i_live, i_fresh)
+        np.testing.assert_array_equal(d_live, d_fresh)
+
+    def test_promote_cold_tenant_and_errors(self, feats):
+        router = _router(feats)
+        router.add_tenant("a", _L(1))
+        with pytest.raises(TenantError, match="no shadow"):
+            router.promote("a")
+        router.register_shadow("a", _L(9))
+        t = router.promote("a")                 # never served live
+        assert t.warm and t.shadow is None
+        _, ids = router.search("a", feats[0])
+        _, o_ids = _oracle(_L(9), feats, feats[0])
+        np.testing.assert_array_equal(ids, o_ids)
+        with pytest.raises(TenantError, match="sample_rate"):
+            router.register_shadow("a", _L(9), sample_rate=0.0)
+
+
+class TestSnapshots:
+    def test_multi_tenant_round_trip(self, feats, tmp_path):
+        router = _router(feats)
+        router.add_tenant("a", _L(1))
+        router.add_tenant("b", _L(2), backend="ivf", build_kwargs=IVF_KW)
+        router.add_tenant("cold", _L(3))
+        router.warm("a")
+        router.warm("b")
+        save_tenants(router, str(tmp_path))
+
+        back = load_tenants(str(tmp_path))
+        assert set(back.tenants()) == {"a", "b", "cold"}
+        assert back.tenant("a").warm and back.tenant("b").warm
+        assert not back.tenant("cold").warm     # cold stays cold
+        q = feats[5] + 0.01
+        for name in ("a", "b", "cold"):
+            d0, i0 = router.search(name, q)
+            d1, i1 = back.search(name, q)
+            np.testing.assert_array_equal(i0, i1)
+            np.testing.assert_allclose(d0, d1, rtol=1e-6)
+
+    def test_stale_views_persist_as_cold(self, feats, tmp_path):
+        router = _router(feats)
+        router.add_tenant("a", _L(1))
+        router.warm("a")
+        router.extend(np.ones((2, D), np.float32))  # view now stale
+        save_tenants(router, str(tmp_path))
+        back = load_tenants(str(tmp_path))
+        assert not back.tenant("a").warm
+        assert back.gallery_rows == M + 2
+
+    def test_attach_fingerprint_mismatch_rejected(self, feats, tmp_path):
+        router = _router(feats)
+        router.add_tenant("a", _L(1))
+        router.warm("a")
+        save_tenants(router, str(tmp_path))
+        other = _router(feats)
+        other.add_tenant("a", _L(2))            # DIFFERENT factor
+        with pytest.raises(TenantFingerprintError):
+            attach_view(other, "a", str(tmp_path / "tenant_a"))
+        assert not other.tenant("a").warm
+
+    def test_load_with_swapped_factors_typed_error(self, feats, tmp_path):
+        router = _router(feats)
+        router.add_tenant("a", _L(1))
+        save_tenants(router, str(tmp_path))
+        # corrupt: overwrite factors.npz with a different L
+        np.savez(str(tmp_path / "factors.npz"), a=_L(2))
+        with pytest.raises(TenantFingerprintError,
+                           match="different saves"):
+            load_tenants(str(tmp_path))
+
+
+class TestAccountingAndObs:
+    def test_memory_counts_gallery_once(self, feats):
+        router = _router(feats)
+        for i, name in enumerate(("a", "b", "c")):
+            router.add_tenant(name, _L(i + 1))
+            router.warm(name)
+        mem = router.memory()
+        assert mem["gallery"] >= feats.nbytes
+        assert set(mem["tenants"]) == {"a", "b", "c"}
+        assert mem["total"] == (mem["gallery"]
+                                + sum(mem["tenants"].values()))
+        # the win: total < 3 independent stacks each holding raw + view
+        independent = sum(mem["gallery"] + v
+                          for v in mem["tenants"].values())
+        assert mem["total"] < independent
+
+    def test_engine_series_carry_tenant_labels(self, feats):
+        router = _router(feats)
+        router.add_tenant("a", _L(1))
+        router.add_tenant("b", _L(2))
+        router.search("a", feats[0])
+        router.search("b", feats[0])
+        snap = router.registry.snapshot()
+        reqs = snap["counters"]["engine_requests_total"]["values"]
+        assert set(reqs) == {"tenant=a", "tenant=b"}
+        assert snap["counters"]["tenant_requests_total"]["values"] == {
+            "tenant=a": 1.0, "tenant=b": 1.0}
+
+    def test_validation_errors(self, feats):
+        router = _router(feats)
+        with pytest.raises(TenantError, match="invalid tenant name"):
+            router.add_tenant("bad#name", _L(1))
+        with pytest.raises(TenantError, match="unknown backend"):
+            router.add_tenant("a", _L(1), backend="faiss")
+        with pytest.raises(TenantError, match="L must be"):
+            router.add_tenant("a", np.zeros((4, D + 1), np.float32))
+        router.add_tenant("a", _L(1))
+        with pytest.raises(TenantError, match="already registered"):
+            router.add_tenant("a", _L(2))
+        with pytest.raises(TenantError, match="unknown tenant"):
+            router.tenant("zzz")
+        with pytest.raises(TenantError, match="gallery must be"):
+            TenantRouter(np.zeros((M,), np.float32))
